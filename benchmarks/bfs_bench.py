@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: timed BFS runs + CSV emission.
+
+CSV schema (required): name,us_per_call,derived
+``derived`` carries the benchmark-specific figure of merit (TEPS, ratio,
+words, ...).  Multi-device benchmarks run in *subprocesses* so this
+process keeps the default single device."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_worker(payload: Dict, n_devices: int = 16, timeout: int = 2400) -> Dict:
+    """Run benchmarks/worker.py in a subprocess with forced device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = _SRC
+    worker = os.path.join(os.path.dirname(__file__), "worker.py")
+    r = subprocess.run([sys.executable, worker], input=json.dumps(payload),
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"worker failed: {r.stderr[-2000:]}")
+    return json.loads(r.stdout.splitlines()[-1])

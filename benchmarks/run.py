@@ -1,0 +1,194 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (schema required by the
+deliverables).  Container reality: one CPU core, so wall-clock reflects
+*algorithmic work* (the paper's direction-optimization wins show up
+directly); cross-node *scaling* curves are derived from the paper's own
+§6 alpha-beta model fed with our measured communication counters, and are
+labeled ``modeled``.  Multi-device runs execute in subprocesses with a
+forced host-device count so this process keeps 1 device.
+
+  fig3  weak-scaling, top-down vs direction-optimizing      (measured)
+  fig4  strong scaling across grid sizes                    (meas+model)
+  fig5  platform comparison (Cray XE6/XK7/XC30 vs TPU v5e)  (modeled)
+  fig6  DCSC vs CSR storage + search rate                   (measured)
+  fig7  in-node multithreading analogue (rank granularity)  (modeled)
+  fig8  process-grid skewness sweep                         (measured)
+  tab1  communication-volume accounting vs closed forms     (measured)
+  fig9  Twitter-standin real-graph validation               (measured)
+"""
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.bfs_bench import emit, run_worker
+
+
+def fig3_weak_scaling():
+    """TD vs DO as the graph grows.  NOTE: wall-us on this container times
+    the *dense-vectorized* local step (frontier-independent work — the
+    work-proportional path is the Pallas kernel, interpret-only on CPU),
+    so the paper's Fig-3 quantity is the measured USEFUL-WORK speedup
+    from the counters: edges actually needing examination."""
+    for scale in (12, 13, 14):
+        res = {}
+        for diropt in (False, True):
+            r = run_worker({"scale": scale, "grid": [4, 4],
+                            "diropt": diropt, "roots": 4, "validate": scale <= 13})
+            res[diropt] = r
+            name = f"fig3_weak_s{scale}_{'diropt' if diropt else 'topdown'}"
+            emit(name, r["hmean_s"] * 1e6,
+                 f"wallTEPS={r['teps']:.3e};"
+                 f"edges_useful={r['counters']['edges_useful']:.3e}")
+        work = (res[False]["counters"]["edges_useful"]
+                / max(res[True]["counters"]["edges_useful"], 1))
+        words = (sum(v for k, v in res[False]["counters"].items()
+                     if k.startswith("use_"))
+                 / max(sum(v for k, v in res[True]["counters"].items()
+                           if k.startswith("use_")), 1))
+        emit(f"fig3_weak_s{scale}_speedup", 0.0,
+             f"work_speedup={work:.2f}x;comm_speedup={words:.2f}x"
+             f";paper_claims=6.5-7.9x")
+
+
+def fig4_strong_scaling():
+    """Fixed graph, growing machine: measured local work + modeled comm."""
+    from repro.core.comm_model import AlphaBeta
+    r = run_worker({"scale": 14, "grid": [4, 4], "diropt": True, "roots": 4})
+    ab = AlphaBeta()
+    n, m = r["n"], r["m"]
+    base_work_s = r["hmean_s"]
+    for p_side in (8, 16, 32, 64, 128):
+        p = p_side * p_side
+        comm = (ab.expand_cost(n, p_side, p_side)
+                + ab.fold_cost(m, p_side, p_side)
+                + 4 * ab.bottomup_level_cost(n, p_side, p_side))
+        work = base_work_s * 16 / p          # perfect local-work split
+        t = max(comm, work) + 0.2 * min(comm, work)
+        emit(f"fig4_strong_p{p}", t * 1e6,
+             f"modeled_TEPS={r['m_input']/t:.3e}")
+
+
+def fig5_platforms():
+    """alpha-beta model across machines (paper Table 2 + our target)."""
+    machines = {
+        "xe6_hopper": dict(bw=49e9 / 24, lat=1.5e-6),
+        "xk7_titan": dict(bw=52e9 / 16, lat=1.5e-6),
+        "xc30_edison": dict(bw=104e9 / 24, lat=1.0e-6),
+        "tpu_v5e": dict(bw=50e9, lat=1e-6),
+    }
+    n, m, s_b = 2 ** 26, 2 ** 30, 4
+    for name, mc in machines.items():
+        from repro.core.comm_model import AlphaBeta
+        ab = AlphaBeta(alpha_n=mc["lat"], beta_n=1.0 / mc["bw"])
+        t = (ab.expand_cost(n, 16, 16) + ab.fold_cost(m, 16, 16)
+             + s_b * ab.bottomup_level_cost(n, 16, 16))
+        emit(f"fig5_{name}", t * 1e6, f"modeled_comm_per_search_s={t:.4f}")
+
+
+def fig6_dcsc_vs_csr():
+    """Paper Fig 6: DCSC pays off in the hypersparse regime (big grids /
+    sparse graphs); CSR wins when blocks are dense.  Both regimes shown."""
+    for scale, deg, grid, regime in ((13, 16, [4, 4], "dense"),
+                                     (14, 4, [8, 8], "hypersparse")):
+        for storage in ("csr", "dcsc"):
+            r = run_worker({"scale": scale, "degree": deg, "grid": grid,
+                            "storage": storage, "roots": 3,
+                            "fold_mode": "alltoall" if storage == "csr"
+                            else "reduce"},
+                           n_devices=grid[0] * grid[1])
+            mem = r[f"mem_{storage}"]["total_i32"]
+            emit(f"fig6_{regime}_{storage}", r["hmean_s"] * 1e6,
+                 f"TEPS={r['teps']:.3e};storage_i32_words={mem}")
+        ratio = r["mem_csr"]["pointer_i32"] / r["mem_dcsc"]["pointer_i32"]
+        emit(f"fig6_{regime}_ptr_ratio", 0.0,
+             f"csr_over_dcsc={ratio:.2f};paper=dcsc_wins_at_scale")
+
+
+def fig7_multithreading():
+    """Rank-granularity analogue: fewer, fatter ranks shrink collective
+    participant counts (the paper's 15-17% multithreading win)."""
+    from repro.core.comm_model import AlphaBeta
+    ab = AlphaBeta()
+    n, m = 2 ** 26, 2 ** 30
+    for label, (pr, pc) in {"flat_ranks_24x24": (24, 24),
+                            "chip_ranks_16x16": (16, 16),
+                            "chip_ranks_8x8": (8, 8)}.items():
+        t = ab.expand_cost(n, pr, pc) + ab.fold_cost(m, pr, pc) \
+            + 4 * ab.bottomup_level_cost(n, pr, pc)
+        emit(f"fig7_{label}", t * 1e6, f"modeled_comm_s={t:.4f}")
+
+
+def fig8_grid_skewness():
+    for pr, pc in ((1, 16), (2, 8), (4, 4), (8, 2), (16, 1)):
+        r = run_worker({"scale": 14, "grid": [pr, pc], "diropt": True,
+                        "roots": 3})
+        wire = sum(v for k, v in r["counters"].items()
+                   if k.startswith("wire_"))
+        emit(f"fig8_grid_{pr}x{pc}", r["hmean_s"] * 1e6,
+             f"TEPS={r['teps']:.3e};wire_words={wire:.3e}")
+
+
+def table1_comm_volume():
+    from repro.core import comm_model
+    r_td = run_worker({"scale": 14, "grid": [4, 4], "diropt": False,
+                       "roots": 3})
+    r_do = run_worker({"scale": 14, "grid": [4, 4], "diropt": True,
+                       "roots": 3})
+    use = lambda r: sum(v for k, v in r["counters"].items()
+                        if k.startswith("use_"))
+    wt_model = comm_model.topdown_words(r_td["n"], r_td["m"], 4, 4)
+    wb_model = comm_model.bottomup_words(r_do["n"], 4, 4, s_b=3)
+    emit("tab1_topdown_useful_words", 0.0,
+         f"measured={use(r_td):.3e};model_wt={wt_model:.3e}")
+    emit("tab1_diropt_useful_words", 0.0,
+         f"measured={use(r_do):.3e};model_wb={wb_model:.3e}")
+    k = r_td["m"] / r_td["n"]
+    emit("tab1_eq2_ratio", 0.0,
+         f"measured={use(r_td)/max(use(r_do),1):.1f};"
+         f"eq2={comm_model.ratio_eq2(k, 4, 3):.1f}")
+    for key, v in sorted(r_do["counters"].items()):
+        emit(f"tab1_ctr_{key}", 0.0, f"words={v:.3e}")
+
+
+def fig9_twitter_standin():
+    """Real-graph validation (Twitter replaced by an offline scale-free
+    standin of matching skew; see DESIGN.md assumption 5)."""
+    r_do = run_worker({"graph": "twitter_standin", "n": 1 << 15,
+                       "m": 1 << 19, "grid": [4, 4], "diropt": True,
+                       "roots": 4, "validate": True})
+    r_td = run_worker({"graph": "twitter_standin", "n": 1 << 15,
+                       "m": 1 << 19, "grid": [4, 4], "diropt": False,
+                       "roots": 4})
+    emit("fig9_twitter_diropt", r_do["hmean_s"] * 1e6,
+         f"wallTEPS={r_do['teps']:.3e};"
+         f"edges_useful={r_do['counters']['edges_useful']:.3e}")
+    emit("fig9_twitter_topdown", r_td["hmean_s"] * 1e6,
+         f"wallTEPS={r_td['teps']:.3e};"
+         f"edges_useful={r_td['counters']['edges_useful']:.3e}")
+    work = (r_td["counters"]["edges_useful"]
+            / max(r_do["counters"]["edges_useful"], 1))
+    emit("fig9_cores_for_0.2s", 0.0,
+         f"economic_ratio={work:.2f}x_fewer_cores_for_same_work")
+
+
+ALL = [fig3_weak_scaling, fig4_strong_scaling, fig5_platforms,
+       fig6_dcsc_vs_csr, fig7_multithreading, fig8_grid_skewness,
+       table1_comm_volume, fig9_twitter_standin]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for fn in ALL:
+        if only and only not in fn.__name__:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"# {fn.__name__} done in {time.time()-t0:.0f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark subprocess worker: runs BFS configurations on a forced
+multi-device host platform and reports timings + counters as JSON."""
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def main():
+    payload = json.loads(sys.stdin.read())
+    from repro.configs.base import BFSConfig
+    from repro.core.bfs import run_bfs, make_bfs_fn
+    from repro.core.ref import validate_parents
+    from repro.graph.formats import build_blocked
+    from repro.graph.rmat import rmat_graph, scale_free_standin, random_source
+    from repro.launch.mesh import make_local_mesh
+    import jax
+
+    if payload.get("graph") == "twitter_standin":
+        edges = scale_free_standin(payload["n"], payload["m"], seed=7)
+    else:
+        edges = rmat_graph(payload["scale"], payload.get("degree", 16),
+                           seed=payload.get("seed", 1))
+    pr, pc = payload["grid"]
+    g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
+    mesh = make_local_mesh(pr, pc)
+    cfg = BFSConfig(storage=payload.get("storage", "dcsc"),
+                    fold_mode=payload.get("fold_mode", "reduce"),
+                    direction_optimizing=payload.get("diropt", True))
+    rng = np.random.default_rng(0)
+    roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
+
+    # build once, time many (excludes compile)
+    part = g.part
+    fn, keys = make_bfs_fn(mesh, part, cfg, g.cap_seg,
+                           maxdeg=g.maxdeg_col)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = NamedSharding(mesh, P("data", "model"))
+    arrs = g.device_arrays()
+    gdev = {k: jax.device_put(np.asarray(arrs[k]), sh) for k in keys}
+    fn(gdev, roots[0])[0].block_until_ready()          # warmup/compile
+    times, counters = [], None
+    for r in roots:
+        t0 = time.perf_counter()
+        pi, lvl, ctr, stats = fn(gdev, r)
+        pi.block_until_ready()
+        times.append(time.perf_counter() - t0)
+        counters = {k: float(v) for k, v in ctr.items()}
+        if payload.get("validate"):
+            ok, msg = validate_parents(
+                edges.n, edges.src, edges.dst, int(r),
+                np.asarray(pi).reshape(part.n)[: part.n_orig])
+            assert ok, msg
+    hmean = len(times) / sum(1.0 / t for t in times)
+    print(json.dumps({
+        "hmean_s": hmean, "times": times, "m_input": edges.m_input,
+        "m": edges.m, "n": edges.n, "counters": counters,
+        "teps": edges.m_input / hmean,
+        "mem_csr": g.storage_words("csr"),
+        "mem_dcsc": g.storage_words("dcsc"),
+    }))
+
+
+if __name__ == "__main__":
+    main()

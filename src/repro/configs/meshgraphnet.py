@@ -1,0 +1,11 @@
+"""meshgraphnet [arXiv:2010.03409; unverified]."""
+from repro.configs.base import GNNConfig, register
+
+CONFIG = register(GNNConfig(
+    arch="meshgraphnet",
+    model="meshgraphnet",
+    n_layers=15,
+    d_hidden=128,
+    aggregator="sum",
+    mlp_layers=2,
+))

@@ -1,0 +1,15 @@
+"""mixtral-8x22b — 8 experts top-2, SWA [arXiv:2401.04088; hf]."""
+from repro.configs.base import LMConfig, MoEConfig, register
+
+CONFIG = register(LMConfig(
+    arch="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=32768,
+    swa_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384),
+))

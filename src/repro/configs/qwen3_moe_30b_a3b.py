@@ -1,0 +1,28 @@
+"""qwen3-moe-30b-a3b — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf]."""
+from repro.configs.base import LMConfig, MoEConfig, register
+
+CONFIG = register(LMConfig(
+    arch="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,                      # d_ff is per-expert for this config
+    vocab=151936,
+    d_head=128,
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=768),
+))
+
+# --- §Perf hillclimb variants (train_4k memory-bound; EXPERIMENTS.md) ---
+import dataclasses as _dc
+CONFIG_R1 = register(_dc.replace(CONFIG, arch="qwen3-moe-r1",
+                                 remat_policy="dots"))
+CONFIG_R2 = register(_dc.replace(
+    CONFIG_R1, arch="qwen3-moe-r2",
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=768,
+                  capacity_factor=1.0)))
+CONFIG_R3 = register(_dc.replace(CONFIG_R2, arch="qwen3-moe-r3",
+                                 opt_state_dtype="bfloat16"))
+CONFIG_R4 = register(_dc.replace(CONFIG_R3, arch="qwen3-moe-r4",
+                                 loss_bf16=True))

@@ -1,0 +1,14 @@
+"""starcoder2-7b — GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.configs.base import LMConfig, register
+
+CONFIG = register(LMConfig(
+    arch="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab=49152,
+    fsdp=True,   # 7B dense: params+opt moments sharded over dp as well
+))

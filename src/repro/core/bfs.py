@@ -1,0 +1,178 @@
+"""Public distributed-BFS API: direction-optimizing 2D BFS (paper §4.4).
+
+The whole search (level loop + direction switching + both step kinds) is a
+single shard_map'd, jitted program over mesh axes (row, col) = (pr, pc).
+Direction switching uses the Beamer heuristics the paper cites (§4.4):
+top-down -> bottom-up when m_f > m_u/alpha, back when n_f < n/beta.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import BFSConfig
+from repro.core import steps
+from repro.core.partition import Partition2D
+from repro.core.steps import LevelArgs, bottomup_level, topdown_level, zero_counters
+from repro.graph.formats import BlockedGraph
+
+MAX_LEVELS = 64
+
+# graph arrays needed per local-discovery mode
+_DENSE_KEYS = ("edge_src", "row_idx", "nnz", "deg_A", "col_idx", "row_ptr",
+               "seg_ptr", "edge_dst")
+_KERNEL_KEYS = ("col_ptr", "row_idx", "jc", "cp", "nzc", "nnz", "deg_A",
+                "col_idx", "row_ptr", "seg_ptr")
+
+
+@dataclass
+class BFSResult:
+    parents: np.ndarray          # (n_orig,)
+    n_levels: int
+    counters: Dict[str, float]   # whole-search totals (paper 64-bit words)
+    level_stats: np.ndarray      # (MAX_LEVELS, 4): n_f, m_f, mode, used
+
+
+def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
+              n_real_edges: float, sync_axis: Optional[str] = None):
+    """sync_axis: when searches run batched across an outer axis (pods),
+    the level loop must take the same trip count on every slice — the
+    loop continues while ANY slice has a live frontier (idle slices run
+    empty levels; collectives stay aligned)."""
+    pr, pc, chunk = part.pr, part.pc, part.chunk
+    axes = (args.row_axis, args.col_axis)
+    sync = axes + ((sync_axis,) if sync_axis else ())
+    i = lax.axis_index(args.row_axis)
+    j = lax.axis_index(args.col_axis)
+    g = {k: v[0, 0] for k, v in g.items()}
+
+    gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
+    pi0 = jnp.where(gidx == root, root, jnp.int32(-1))
+    front0 = gidx == root
+    stats0 = jnp.zeros((MAX_LEVELS, 4), jnp.float32)
+
+    def cond(st):
+        pi, front, mode, level, n_f, ctr, stats = st
+        return (level < MAX_LEVELS) & (n_f > 0)
+
+    def body(st):
+        pi, front, mode, level, n_f, ctr, stats = st
+        m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
+                               dtype=jnp.float32), axes)
+        m_u = lax.psum(jnp.sum(jnp.where(pi == -1, g["deg_A"], 0),
+                               dtype=jnp.float32), axes)
+        if cfg.direction_optimizing:
+            go_bu = (mode == 0) & (m_f > m_u / cfg.alpha)
+            go_td = (mode == 1) & (n_f < part.n / cfg.beta)
+            new_mode = jnp.where(go_bu, 1, jnp.where(go_td, 0, mode))
+        else:
+            new_mode = mode
+        stats = stats.at[level].set(
+            jnp.stack([n_f, m_f, new_mode.astype(jnp.float32),
+                       jnp.float32(1)]))
+
+        pi2, front2, c2 = lax.cond(
+            new_mode == 1,
+            lambda pf: bottomup_level(g, pf[0], pf[1], args),
+            lambda pf: topdown_level(g, pf[0], pf[1], args),
+            (pi, front))
+        ctr = {k: ctr[k] + c2[k] for k in ctr}
+        n_f2 = lax.psum(jnp.sum(front2, dtype=jnp.float32), axes)
+        # cond feeds on the cross-slice max so batched searches stay in
+        # lockstep (heuristics above use the per-slice n_f)
+        n_sync = lax.pmax(n_f2, sync) if sync != axes else n_f2
+        return (pi2, front2, new_mode, level + 1, n_sync, ctr, stats)
+
+    st = (pi0, front0, jnp.int32(0), jnp.int32(0), jnp.float32(1.0),
+          zero_counters(), stats0)
+    pi, front, mode, level, n_f, ctr, stats = lax.while_loop(cond, body, st)
+    return pi[None, None], level, ctr, stats
+
+
+def make_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig, cap_seg: int,
+                row_axis: str = "data", col_axis: str = "model",
+                local_mode: str = "dense", n_real_edges: float = 0.0,
+                maxdeg: int = 0, cap_f: int = 0):
+    """Build the jitted whole-search BFS function for a given mesh/graph
+    geometry.  Returns fn(graph_arrays_dict, root) -> (pi, level, ctr, stats)."""
+    args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
+                     fold_mode=cfg.fold_mode,
+                     perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
+                     local_mode=local_mode, storage=cfg.storage,
+                     cap_f=cap_f, maxdeg=maxdeg,
+                     use_edge_dst=cfg.use_edge_dst,
+                     compact_updates=cfg.compact_updates)
+    keys = _KERNEL_KEYS if local_mode == "kernel" else _DENSE_KEYS
+    body = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
+                             n_real_edges=n_real_edges)
+    gspec = {k: P(row_axis, col_axis) for k in keys}
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(gspec, P()),
+        out_specs=(P(row_axis, col_axis), P(), {
+            k: P() for k in steps.COUNTER_KEYS}, P()),
+        check_vma=False,   # pallas_call outputs carry no vma annotation
+    )
+    return jax.jit(mapped), keys
+
+
+def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
+                          cap_seg: int, n_roots: int,
+                          pod_axis: str = "pod", row_axis: str = "data",
+                          col_axis: str = "model", maxdeg: int = 0):
+    """Batched independent BFS roots sharded over the pod axis — the
+    multi-pod Graph500 pattern (16-64 roots per benchmark run, pods are
+    embarrassingly parallel across roots; graph blocks replicated across
+    pods, zero inter-pod traffic)."""
+    args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
+                     fold_mode=cfg.fold_mode,
+                     perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
+                     storage=cfg.storage, maxdeg=maxdeg,
+                     use_edge_dst=cfg.use_edge_dst,
+                     compact_updates=cfg.compact_updates)
+    body1 = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
+                              n_real_edges=0.0, sync_axis=pod_axis)
+
+    def multi_body(g, roots):
+        # roots: (n_roots_local,) — scan full searches over local roots
+        def one(carry, root):
+            pi, level, ctr, stats = body1(g, root)
+            return carry, (pi[0, 0], level)
+        _, (pis, levels) = lax.scan(one, jnp.int32(0), roots.reshape(-1))
+        return pis[None, None], levels
+
+    gspec = {k: P(row_axis, col_axis) for k in _DENSE_KEYS}
+    mapped = jax.shard_map(
+        multi_body, mesh=mesh,
+        in_specs=(gspec, P(pod_axis)),
+        out_specs=(P(row_axis, col_axis, pod_axis, None), P(pod_axis)),
+        check_vma=False)
+    return jax.jit(mapped), _DENSE_KEYS
+
+
+def run_bfs(graph: BlockedGraph, root: int, cfg: BFSConfig, mesh,
+            row_axis: str = "data", col_axis: str = "model",
+            local_mode: str = "dense") -> BFSResult:
+    """End-to-end convenience wrapper: ship blocks, run, validate shapes."""
+    part = graph.part
+    fn, keys = make_bfs_fn(mesh, part, cfg, graph.cap_seg, row_axis,
+                           col_axis, local_mode, n_real_edges=graph.m,
+                           maxdeg=graph.maxdeg_col)
+    arrays = graph.device_arrays()
+    sh = NamedSharding(mesh, P(row_axis, col_axis))
+    gdev = {k: jax.device_put(np.asarray(arrays[k]), sh) for k in keys}
+    pi, level, ctr, stats = fn(gdev, jnp.int32(root))
+    pi = np.asarray(pi).reshape(part.n)[: part.n_orig]
+    return BFSResult(
+        parents=pi.astype(np.int64),
+        n_levels=int(level),
+        counters={k: float(v) for k, v in ctr.items()},
+        level_stats=np.asarray(stats),
+    )

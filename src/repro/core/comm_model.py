@@ -1,0 +1,48 @@
+"""The paper's §6 alpha-beta communication model (Table 1 / Eq. 2).
+
+Counts are 64-bit words per *entire search*, matching the paper's units.
+The distributed implementation threads live counters through every
+collective; benchmarks compare measured "useful words" against these
+closed forms.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def topdown_words(n: int, m: int, pr: int, pc: int) -> float:
+    """w_t ~= 4m + n*pr  (undirected: each edge examined from both sides,
+    2 words per edge endpoint pair; expand replicates n along columns)."""
+    return 4.0 * m + float(n) * pr
+
+
+def bottomup_words(n: int, pr: int, pc: int, s_b: float = 4.0) -> float:
+    """w_b ~= n * (s_b*(pr+pc+1)/64 + 2)   (Table 1 total)."""
+    return n * (s_b * (pr + pc + 1) / 64.0 + 2.0)
+
+
+def ratio_eq2(k: float, pc: int, s_b: float = 4.0) -> float:
+    """Eq. (2), square grid pr=pc: (pc + 4k) / (s_b(2pc+1)/64 + 2)."""
+    return (pc + 4.0 * k) / (s_b * (2.0 * pc + 1.0) / 64.0 + 2.0)
+
+
+@dataclass(frozen=True)
+class AlphaBeta:
+    """Machine terms for the latency/bandwidth model. Defaults are TPU v5e
+    ICI-flavored stand-ins (used for *relative* predictions only)."""
+    alpha_n: float = 1e-6        # network latency (s)
+    beta_n: float = 1.0 / 50e9   # s per byte per link
+
+    def expand_cost(self, n: int, pr: int, pc: int, word_bytes: int = 8) -> float:
+        return pr * self.alpha_n + (n / pc) * word_bytes * self.beta_n
+
+    def fold_cost(self, m: int, pr: int, pc: int, word_bytes: int = 8) -> float:
+        p = pr * pc
+        return pc * self.alpha_n + (m / p) * word_bytes * self.beta_n
+
+    def bottomup_level_cost(self, n: int, pr: int, pc: int) -> float:
+        # pc sub-steps of rotation + updates, bitmap-compressed
+        rotate = pc * (self.alpha_n + (n / (pr * pc) / 8) * self.beta_n)
+        gather = pr * self.alpha_n + (n / pc / 8) * self.beta_n
+        updates = pc * self.alpha_n + (n / (pr * pc)) * 8 * self.beta_n
+        return rotate + gather + updates

@@ -1,0 +1,83 @@
+"""2D (pr x pc) vertex/edge partition — the paper's Eq. (1) checkerboard.
+
+Vertex-vector layouts (the paper's distributed-vector conventions):
+
+  layout A ("row-aligned"): the n-vector is split into p = pr*pc chunks of
+    size ``chunk``; device (i,j) owns chunk k = i*pc + j.  Consecutive j
+    tile the row strip R_i = [i*nr, (i+1)*nr).  Parents/completed live here;
+    the fold (alltoall along the processor row) lands here natively.
+
+  layout B ("col-aligned"): device (i,j) owns chunk k = j*pr + i.
+    Consecutive i tile the column strip C_j = [j*nc, (j+1)*nc), so an
+    allgather along the processor *column* (mesh axis "data") reconstructs
+    exactly C_j — the expand step.  TransposeVector converts A -> B with a
+    single collective-permute (the paper's p2p transpose, Table 1).
+
+The adjacency block at device (i,j) is T[R_i, C_j] where T[v, u] = 1 iff
+edge u->v (pre-transposed, as the paper assumes for top-down).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Partition2D:
+    n: int        # padded vertex count
+    n_orig: int   # original vertex count
+    pr: int
+    pc: int
+
+    @property
+    def p(self) -> int:
+        return self.pr * self.pc
+
+    @property
+    def chunk(self) -> int:
+        return self.n // self.p
+
+    @property
+    def nr(self) -> int:          # rows per block (R_i size)
+        return self.n // self.pr
+
+    @property
+    def nc(self) -> int:          # cols per block (C_j size)
+        return self.n // self.pc
+
+    # ---- layout maps (host-side helpers; device code uses axis_index) ----
+
+    def owner_A(self, v: np.ndarray):
+        k = v // self.chunk
+        return k // self.pc, k % self.pc, v % self.chunk
+
+    def owner_B(self, v: np.ndarray):
+        k = v // self.chunk
+        return k % self.pr, k // self.pr, v % self.chunk
+
+    def transpose_perm(self):
+        """ppermute pairs for TransposeVector (layout A chunk k -> B owner)."""
+        return [(k, (k % self.pr) * self.pc + (k // self.pr))
+                for k in range(self.p)]
+
+    def inverse_transpose_perm(self):
+        return [(d, s) for (s, d) in self.transpose_perm()]
+
+    def vec_to_blocks(self, x: np.ndarray) -> np.ndarray:
+        """(n,) -> (pr, pc, chunk) in layout A."""
+        return x.reshape(self.pr, self.pc, self.chunk)
+
+    def blocks_to_vec(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(x).reshape(self.n)[: self.n_orig]
+
+
+def make_partition(n_orig: int, pr: int, pc: int, align: int = 128) -> Partition2D:
+    """Pad n so chunk = n/(pr*pc) is a multiple of ``align`` (>=32 so bitmap
+    words tile chunks exactly; 128 matches TPU lane width)."""
+    if align % 32:
+        raise ValueError("align must be a multiple of 32 (bitmap words)")
+    p = pr * pc
+    quantum = p * align
+    n = ((max(n_orig, 1) + quantum - 1) // quantum) * quantum
+    return Partition2D(n=n, n_orig=n_orig, pr=pr, pc=pc)

@@ -1,0 +1,114 @@
+"""Sequential oracles: Algorithm 1 (top-down), Algorithm 2 (bottom-up),
+and a BFS-tree validity checker.  Pure numpy — the ground truth every
+distributed / kernel implementation is validated against.
+
+Parent choice in BFS is nondeterministic (any depth-(d-1) in-neighbor is
+legal), so validation checks *tree validity + depth equality*, not
+parent-array equality.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def _csr(n: int, src: np.ndarray, dst: np.ndarray):
+    order = np.lexsort((dst, src))
+    s, d = src[order], dst[order]
+    ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(ptr, s + 1, 1)
+    np.cumsum(ptr, out=ptr)
+    return ptr, d
+
+
+def bfs_topdown(n: int, src: np.ndarray, dst: np.ndarray, root: int) -> np.ndarray:
+    """Algorithm 1. Returns parent[n] (root's parent = root; -1 unreachable)."""
+    ptr, adj = _csr(n, src, dst)
+    parent = np.full(n, -1, dtype=np.int64)
+    parent[root] = root
+    frontier = np.array([root], dtype=np.int64)
+    while frontier.size:
+        nxt = []
+        for u in frontier:
+            for v in adj[ptr[u]:ptr[u + 1]]:
+                if parent[v] == -1:
+                    parent[v] = u
+                    nxt.append(v)
+        frontier = np.array(nxt, dtype=np.int64)
+    return parent
+
+
+def bfs_bottomup(n: int, src: np.ndarray, dst: np.ndarray, root: int) -> np.ndarray:
+    """Algorithm 2 (in-neighbor scan with early exit)."""
+    # in-neighbors of v = sources u of edges u->v
+    ptr, radj = _csr(n, dst, src)
+    parent = np.full(n, -1, dtype=np.int64)
+    parent[root] = root
+    frontier = np.zeros(n, dtype=bool)
+    frontier[root] = True
+    while frontier.any():
+        nxt = np.zeros(n, dtype=bool)
+        for u in range(n):
+            if parent[u] == -1:
+                for v in radj[ptr[u]:ptr[u + 1]]:
+                    if frontier[v]:
+                        parent[u] = v
+                        nxt[u] = True
+                        break
+        frontier = nxt
+    return parent
+
+
+def bfs_depths(n: int, src: np.ndarray, dst: np.ndarray, root: int) -> np.ndarray:
+    """Level-synchronous depths (vectorized; oracle for big tests)."""
+    ptr, adj = _csr(n, src, dst)
+    depth = np.full(n, -1, dtype=np.int64)
+    depth[root] = 0
+    frontier = np.array([root], dtype=np.int64)
+    d = 0
+    while frontier.size:
+        # all neighbors of the frontier
+        counts = ptr[frontier + 1] - ptr[frontier]
+        total = int(counts.sum())
+        if total == 0:
+            break
+        out = np.empty(total, dtype=np.int64)
+        pos = 0
+        for u, c in zip(frontier, counts):
+            out[pos:pos + c] = adj[ptr[u]:ptr[u] + c]
+            pos += c
+        nbrs = np.unique(out)
+        new = nbrs[depth[nbrs] == -1]
+        depth[new] = d + 1
+        frontier = new
+        d += 1
+    return depth
+
+
+def validate_parents(n: int, src: np.ndarray, dst: np.ndarray, root: int,
+                     parent: np.ndarray) -> Tuple[bool, str]:
+    """BFS-tree validity: (1) root self-parent, (2) every tree edge exists,
+    (3) parent depth = child depth - 1, (4) reachable set matches oracle."""
+    depth = bfs_depths(n, src, dst, root)
+    parent = np.asarray(parent, dtype=np.int64)
+    if parent[root] != root:
+        return False, "root parent mismatch"
+    reach_ref = depth >= 0
+    reach_got = parent >= 0
+    if not np.array_equal(reach_ref, reach_got):
+        miss = int(np.sum(reach_ref != reach_got))
+        return False, f"reachable-set mismatch on {miss} vertices"
+    vs = np.flatnonzero(reach_got)
+    vs = vs[vs != root]
+    ps = parent[vs]
+    # tree-edge existence: each (parent[v], v) must be an input edge
+    key_edges = set((src * np.int64(n) + dst).tolist())
+    bad_edges = [(int(p), int(v)) for p, v in zip(ps, vs)
+                 if int(p) * n + int(v) not in key_edges]
+    if bad_edges:
+        return False, f"{len(bad_edges)} tree edges not in graph, e.g. {bad_edges[:3]}"
+    if not np.array_equal(depth[vs], depth[ps] + 1):
+        bad = int(np.sum(depth[vs] != depth[ps] + 1))
+        return False, f"{bad} vertices with parent depth != depth-1"
+    return True, "ok"

@@ -1,0 +1,71 @@
+"""Synthetic dataset builders for the GNN shape cells + input specs.
+
+Full-size graphs appear only as ShapeDtypeStructs in the dry-run; smoke
+tests build *reduced* instances with the same structure (the instructions'
+reduced-config rule).  The Twitter standin for the paper's Fig. 9 lives in
+graph/rmat.py (scale_free_standin).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import GNNConfig, GNNShape
+from repro.graph.rmat import rmat_graph
+
+
+def _edges_for(n_nodes: int, n_edges: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    scale = max(int(np.ceil(np.log2(max(n_nodes, 2)))), 2)
+    ef = max(1, n_edges // (1 << scale))
+    e = rmat_graph(min(scale, 16), edge_factor=min(ef, 64), seed=seed)
+    s = (e.src % n_nodes).astype(np.int32)
+    d = (e.dst % n_nodes).astype(np.int32)
+    if s.size >= n_edges:
+        return s[:n_edges], d[:n_edges]
+    reps = int(np.ceil(n_edges / s.size))
+    return (np.tile(s, reps)[:n_edges],
+            np.tile(d, reps)[:n_edges])
+
+
+def build_gnn_batch(cfg: GNNConfig, shape: GNNShape, *, reduce_to: int = 0,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Concrete (numpy) batch. reduce_to > 0 scales node/edge counts down
+    for smoke tests while preserving structure."""
+    rng = np.random.default_rng(seed)
+    if shape.kind == "batched":
+        n_g = max(shape.batch_graphs // (reduce_to or 1), 2) if reduce_to \
+            else shape.batch_graphs
+        npg, epg = shape.n_nodes, shape.n_edges
+        N, E = n_g * npg, n_g * epg
+        s = rng.integers(0, npg, E).astype(np.int32)
+        d = rng.integers(0, npg, E).astype(np.int32)
+        off = np.repeat(np.arange(n_g, dtype=np.int32) * npg, epg)
+        senders, receivers = s + off, d + off
+        graph_ids = np.repeat(np.arange(n_g, dtype=np.int32), npg)
+        labels = rng.integers(0, cfg.n_classes, n_g).astype(np.int32)
+        d_feat = 16
+    else:
+        scale = reduce_to or 1
+        N = max(shape.n_nodes // scale, 64)
+        E = max(shape.n_edges // scale, 256)
+        senders, receivers = _edges_for(N, E, seed)
+        graph_ids = np.zeros(N, np.int32)
+        labels = rng.integers(0, cfg.n_classes, N).astype(np.int32)
+        d_feat = shape.d_feat or 16
+    x = rng.normal(size=(N, d_feat)).astype(np.float32)
+    pos = rng.normal(size=(N, 3)).astype(np.float32)
+    species = rng.integers(0, 8, N).astype(np.int32)
+    rel = pos[senders] - pos[receivers]
+    e_feat = np.concatenate(
+        [rel, np.linalg.norm(rel, axis=1, keepdims=True)], 1).astype(
+        np.float32)
+    return {
+        "x": x, "pos": pos, "species": species,
+        "senders": senders.astype(np.int32),
+        "receivers": receivers.astype(np.int32),
+        "edge_mask": np.ones(len(senders), np.float32),
+        "e_feat": e_feat, "graph_ids": graph_ids, "labels": labels,
+        "targets": rng.normal(size=(N, 3)).astype(np.float32),
+    }

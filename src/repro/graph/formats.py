@@ -1,0 +1,168 @@
+"""Blocked 2D graph storage: CSR/CSC per block + DCSC/DCSR compressions.
+
+The adjacency block at device (i,j) is T[R_i, C_j], T[v,u]=1 iff edge u->v
+(pre-transposed, paper §4.1).  Two orientations are stored, as the paper
+stores each undirected adjacency twice (§5.1):
+
+  * CSC-by-source-column  -> top-down SpMSV   (frontier u -> children v)
+  * CSR-by-dest-row       -> bottom-up scan   (unvisited v -> parents u)
+
+DCSC (doubly compressed sparse columns, Buluc & Gilbert) compresses the
+O(n*pr) aggregate col_ptr down to O(nnz-columns); DCSR does the same for
+rows.  Both share the index arrays with their uncompressed counterparts,
+so a ``storage`` mode only changes which *pointer* arrays are shipped.
+
+All arrays are statically padded to per-block capacity ``cap`` (XLA needs
+static shapes); ``nnz[(i,j)]`` masks the tail.  ``edge_src``/``edge_dst``
+are explicit per-edge locals for the edge-parallel jnp path (the Pallas
+kernels use the pointer arrays instead).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.partition import Partition2D, make_partition
+from repro.graph.rmat import EdgeList
+
+
+def _round_up(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+@dataclass
+class BlockedGraph:
+    part: Partition2D
+    m_input: int
+    m: int
+    # --- top-down orientation (CSC by source column u) ---
+    col_ptr: np.ndarray   # (pr, pc, nc+1) i32
+    row_idx: np.ndarray   # (pr, pc, cap)  i32  local dest v, CSC order
+    edge_src: np.ndarray  # (pr, pc, cap)  i32  local src u, CSC order
+    # --- bottom-up orientation (CSR by dest row v) ---
+    row_ptr: np.ndarray   # (pr, pc, nr+1) i32
+    col_idx: np.ndarray   # (pr, pc, cap)  i32  local src u, CSR order
+    edge_dst: np.ndarray  # (pr, pc, cap)  i32  local dest v, CSR order
+    seg_ptr: np.ndarray   # (pr, pc, pc+1) i32  CSR ptr at chunk-segment bounds
+    # --- hypersparse pointer compressions ---
+    jc: np.ndarray        # (pr, pc, cap_nzc)   i32 non-empty source cols
+    cp: np.ndarray        # (pr, pc, cap_nzc+1) i32 ptrs into row_idx
+    jr: np.ndarray        # (pr, pc, cap_nzr)   i32 non-empty dest rows
+    rp: np.ndarray        # (pr, pc, cap_nzr+1) i32 ptrs into col_idx
+    # --- per-block / per-vertex metadata ---
+    nnz: np.ndarray       # (pr, pc) i32
+    nzc: np.ndarray       # (pr, pc) i32
+    nzr: np.ndarray       # (pr, pc) i32
+    deg_A: np.ndarray     # (pr, pc, chunk) i32 out-degree, layout-A chunks
+    cap: int
+    cap_seg: int
+    maxdeg_col: int       # max CSC column-segment length over all blocks
+
+    # ------------------------------------------------------------------
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        """The pytree of arrays shipped to devices (everything but part/ints)."""
+        out = {}
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                out[f.name] = v
+        return out
+
+    def storage_words(self, mode: str) -> Dict[str, int]:
+        """64-bit-word accounting per §5.1 (we store i32 => 0.5 words each,
+        reported in raw index units for clarity)."""
+        p = self.part.p
+        idx = 2 * self.cap * p                       # row_idx + col_idx
+        if mode == "csr":
+            ptr = (self.part.nc + 1 + self.part.nr + 1) * p
+        elif mode == "dcsc":
+            ptr = int(2 * (self.nzc.sum() + self.nzr.sum()) + 2 * p)
+        else:
+            raise ValueError(mode)
+        return {"index_i32": idx, "pointer_i32": int(ptr),
+                "total_i32": idx + int(ptr)}
+
+
+def build_blocked(edges: EdgeList, pr: int, pc: int, align: int = 128,
+                  cap_pad: int = 128) -> BlockedGraph:
+    part = make_partition(edges.n, pr, pc, align)
+    nr, nc, chunk, p = part.nr, part.nc, part.chunk, part.p
+    u, v = edges.src.astype(np.int64), edges.dst.astype(np.int64)
+    bi = v // nr          # block row   (dest strip)
+    bj = u // nc          # block col   (source strip)
+    blk = bi * pc + bj
+    u_loc = (u - bj * nc).astype(np.int64)
+    v_loc = (v - bi * nr).astype(np.int64)
+
+    nnz = np.bincount(blk, minlength=p).astype(np.int64)
+    cap = _round_up(max(int(nnz.max()), 1), cap_pad)
+
+    def _orient(primary, secondary, n_primary):
+        """Sort edges by (block, primary, secondary); build padded per-block
+        primary-ptr, secondary index array, explicit primary array."""
+        order = np.lexsort((secondary, primary, blk))
+        pb, pp, ps = blk[order], primary[order], secondary[order]
+        ptr = np.zeros((p, n_primary + 1), dtype=np.int64)
+        # counts of (block, primary)
+        flat = pb * np.int64(n_primary) + pp
+        cnt = np.bincount(flat, minlength=p * n_primary).reshape(p, n_primary)
+        ptr[:, 1:] = np.cumsum(cnt, axis=1)
+        sec = np.zeros((p, cap), dtype=np.int64)
+        pri = np.zeros((p, cap), dtype=np.int64)
+        starts = np.concatenate([[0], np.cumsum(nnz)])
+        for b in range(p):
+            k = int(nnz[b])
+            sec[b, :k] = ps[starts[b]:starts[b] + k]
+            pri[b, :k] = pp[starts[b]:starts[b] + k]
+        return ptr, sec, pri, cnt
+
+    # CSC: primary = source col u, secondary = dest row v
+    col_ptr, row_idx, edge_src, col_cnt = _orient(u_loc, v_loc, nc)
+    # CSR: primary = dest row v, secondary = source col u
+    row_ptr, col_idx, edge_dst, row_cnt = _orient(v_loc, u_loc, nr)
+
+    # DCSC / DCSR: compress pointer arrays over non-empty primaries
+    def _compress(ptr, cnt, n_primary):
+        nz_counts = (cnt > 0).sum(axis=1)
+        cap_nz = _round_up(max(int(nz_counts.max()), 1), 8)
+        jx = np.full((p, cap_nz), n_primary, dtype=np.int64)   # sentinel
+        px = np.zeros((p, cap_nz + 1), dtype=np.int64)
+        for b in range(p):
+            nz = np.flatnonzero(cnt[b])
+            jx[b, :nz.size] = nz
+            px[b, :nz.size] = ptr[b, nz]
+            px[b, nz.size:] = ptr[b, n_primary]
+        return jx, px, nz_counts, cap_nz
+
+    jc, cp, nzc, _ = _compress(col_ptr, col_cnt, nc)
+    jr, rp, nzr, _ = _compress(row_ptr, row_cnt, nr)
+
+    # CSR ptr at chunk-segment boundaries (bottom-up sub-step windows)
+    seg_bounds = np.arange(pc + 1) * chunk
+    seg_ptr = row_ptr[:, seg_bounds]
+    cap_seg = int(np.diff(seg_ptr, axis=1).max())
+    cap_seg = _round_up(max(cap_seg, 1), cap_pad)
+    # pad the CSR-orientation index arrays so a cap_seg-wide dynamic slice
+    # starting at any segment boundary stays in bounds
+    tail = np.zeros((p, cap_seg), dtype=np.int64)
+    col_idx = np.concatenate([col_idx, tail], axis=1)
+    edge_dst = np.concatenate([edge_dst, tail], axis=1)
+
+    deg = np.bincount(u, minlength=part.n).astype(np.int64)
+    deg_A = deg.reshape(pr, pc, chunk)
+
+    def _blk(x):  # (p, ...) -> (pr, pc, ...) int32
+        return np.ascontiguousarray(x.reshape(pr, pc, *x.shape[1:]).astype(np.int32))
+
+    return BlockedGraph(
+        part=part, m_input=edges.m_input, m=edges.m,
+        col_ptr=_blk(col_ptr), row_idx=_blk(row_idx), edge_src=_blk(edge_src),
+        row_ptr=_blk(row_ptr), col_idx=_blk(col_idx), edge_dst=_blk(edge_dst),
+        seg_ptr=_blk(seg_ptr),
+        jc=_blk(jc), cp=_blk(cp), jr=_blk(jr), rp=_blk(rp),
+        nnz=_blk(nnz), nzc=_blk(nzc), nzr=_blk(nzr),
+        deg_A=deg_A.astype(np.int32),
+        cap=cap, cap_seg=cap_seg, maxdeg_col=int(col_cnt.max()),
+    )

@@ -1,0 +1,88 @@
+"""Graph500 R-MAT generator (Chakrabarti et al.) + preprocessing.
+
+Parameters follow the paper (§7.2): a,b,c,d = 0.57,0.19,0.19,0.05 and
+edge factor (average degree) 16 unless stated.  ``scale`` means 2**scale
+vertices.  Preprocessing prunes self loops and duplicate edges (the paper
+does the same); graphs are used undirected, so edges are symmetrized.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class EdgeList:
+    n: int
+    src: np.ndarray  # int64[m]
+    dst: np.ndarray  # int64[m]
+    m_input: int     # edge count *before* dedup/symmetrize (TEPS denominator)
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n).astype(np.int64)
+
+
+def rmat_edges(scale: int, edge_factor: int = 16, a: float = 0.57,
+               b: float = 0.19, c: float = 0.19, seed: int = 1,
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized R-MAT: returns (src, dst) int64 arrays of 2**scale*ef edges."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    ab = a + b
+    d = 1.0 - a - b - c
+    # P(dst_bit=1 | src_bit=0) = b/(a+b);  P(dst_bit=1 | src_bit=1) = d/(c+d)
+    p_dst_given0 = b / ab
+    p_dst_given1 = d / (c + d)
+    for level in range(scale):
+        r1 = rng.random(m)
+        r2 = rng.random(m)
+        src_bit = r1 >= ab
+        dst_bit = np.where(src_bit, r2 < p_dst_given1, r2 < p_dst_given0)
+        src |= src_bit.astype(np.int64) << level
+        dst |= dst_bit.astype(np.int64) << level
+    return src, dst
+
+
+def preprocess(src: np.ndarray, dst: np.ndarray, n: int,
+               symmetrize: bool = True) -> EdgeList:
+    """Prune self-loops + duplicates; optionally symmetrize (undirected)."""
+    m_input = int(src.shape[0])
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    key = src * np.int64(n) + dst
+    _, idx = np.unique(key, return_index=True)
+    return EdgeList(n=n, src=src[idx], dst=dst[idx], m_input=m_input)
+
+
+def rmat_graph(scale: int, edge_factor: int = 16, seed: int = 1,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19) -> EdgeList:
+    src, dst = rmat_edges(scale, edge_factor, a, b, c, seed)
+    return preprocess(src, dst, 1 << scale)
+
+
+def scale_free_standin(n: int, m_target: int, seed: int = 7) -> EdgeList:
+    """Synthetic scale-free graph used as the Twitter-dataset standin
+    (container is offline).  Preferential-attachment-flavored R-MAT with a
+    heavier hub parameter, matching Twitter's skew qualitatively."""
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    ef = max(1, m_target // (1 << scale))
+    src, dst = rmat_edges(scale, ef, a=0.65, b=0.15, c=0.15, seed=seed)
+    return preprocess(src, dst, 1 << scale)
+
+
+def random_source(edges: EdgeList, rng: np.random.Generator) -> int:
+    """A random root with at least one edge (Graph500 requirement)."""
+    deg = edges.out_degrees()
+    candidates = np.flatnonzero(deg > 0)
+    return int(rng.choice(candidates))

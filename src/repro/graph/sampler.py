@@ -1,0 +1,58 @@
+"""k-hop neighbor sampler (GraphSAGE-style, static shapes).
+
+``minibatch_lg`` needs a real sampler: this one is jit-compatible and runs
+on device as part of the train step.  It is a *batched BFS frontier
+expansion with fanout caps* — the paper's frontier machinery specialized
+to sampling (DESIGN.md §Arch-applicability).
+
+Occurrence-tree formulation (static shapes): every sampled neighbor is a
+fresh "occurrence node"; layer l has B*f1*...*fl occurrences.  Edges
+connect child occurrences to their parent occurrence, giving a forest the
+GNN aggregates bottom-up.  Zero-degree vertices self-sample (self-loop).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def khop_sample(key: jax.Array, row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
+                seeds: jnp.ndarray, fanouts: Sequence[int]
+                ) -> Dict[str, jnp.ndarray]:
+    """Returns occurrence-tree arrays:
+       node_ids (n_sub,), senders/receivers (E_sub,), edge_mask (E_sub,),
+       layer_sizes (static python list).
+    Occurrence 0..B-1 are the seeds (loss is taken on them)."""
+    layers = [seeds.astype(jnp.int32)]
+    offsets = [0]
+    senders, receivers = [], []
+    total = seeds.shape[0]
+    for li, f in enumerate(fanouts):
+        parents = layers[-1]                       # (P,) vertex ids
+        P = parents.shape[0]
+        key, sub = jax.random.split(key)
+        deg = (row_ptr[parents + 1] - row_ptr[parents]).astype(jnp.int32)
+        r = jax.random.randint(sub, (P, f), 0, 1 << 30)
+        safe_deg = jnp.maximum(deg, 1)[:, None]
+        eidx = row_ptr[parents][:, None] + (r % safe_deg)
+        child = jnp.where(deg[:, None] > 0, col_idx[eidx],
+                          parents[:, None])       # self-sample if isolated
+        child = child.reshape(-1).astype(jnp.int32)
+        parent_occ = offsets[-1] + jnp.arange(P, dtype=jnp.int32)
+        child_occ = total + jnp.arange(P * f, dtype=jnp.int32)
+        senders.append(child_occ)
+        receivers.append(jnp.repeat(parent_occ, f))
+        offsets.append(total)
+        layers.append(child)
+        total += P * f
+    node_ids = jnp.concatenate(layers)
+    return {
+        "node_ids": node_ids,
+        "senders": jnp.concatenate(senders),
+        "receivers": jnp.concatenate(receivers),
+        "edge_mask": jnp.ones((sum(l.shape[0] for l in layers[1:]),),
+                              jnp.float32),
+        "n_seed": seeds.shape[0],
+    }

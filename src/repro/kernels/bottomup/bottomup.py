@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: bottom-up BFS sub-step (Alg. 4, lines 10-16).
+
+TPU adaptation of the paper's serialized inner loop:
+
+  * The per-vertex "scan neighbors until a parent is found, then stop"
+    early exit is hostile to SIMD, so it is restructured at *tile*
+    granularity: a VMEM-resident row tile (RT rows) scans its contiguous
+    CSR edge window in ET-edge tiles inside a ``lax.while_loop`` whose
+    predicate stops as soon as EVERY live row in the tile has found a
+    parent (or the window is exhausted).  The work skip the paper gets
+    from ``break`` is preserved — whole edge tiles are never touched once
+    the row tile completes — while each tile step stays fully vectorized
+    on the VPU (8x128 lanes).
+  * Frontier membership is a packed uint32 bitmap held in VMEM (the
+    paper's §4.3 "dense format compressed by a bitmap" — constant-time
+    tests with zero network crossings); tests are vector gathers.
+  * ``completed`` rows are masked out up front, so rotated-in work that
+    earlier sub-steps finished is skipped, exactly like the paper's c
+    bitmap filter.
+
+Blocks are VMEM-resident (interpret-validated here; on a real TPU the
+edge window would stream HBM->VMEM via a scalar-prefetch index map — the
+grid/loop structure is unchanged).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT_INF = 2**31 - 1  # python literal: pallas kernels must not capture arrays
+
+
+def _kernel(meta_ref, rp_ref, ue_ref, fb_ref, c_ref, out_ref, *, rt: int,
+            et: int):
+    r = pl.program_id(0)
+    row0 = r * rt
+    ptr = rp_ref[pl.ds(row0, rt + 1)]            # (rt+1,) window-rebased
+    tile_lo, tile_hi = ptr[0], ptr[rt]
+    col_off = meta_ref[0]
+    n_edges = meta_ref[1]
+    completed = c_ref[pl.ds(row0, rt)] != 0      # (rt,)
+    lanes = jnp.arange(rt, dtype=jnp.int32)
+
+    def cond(state):
+        t, par, found = state
+        return (tile_lo + t * et < tile_hi) & jnp.logical_not(found.all())
+
+    def body(state):
+        t, par, found = state
+        e0 = tile_lo + t * et
+        eidx = e0 + jnp.arange(et, dtype=jnp.int32)
+        ue = pl.load(ue_ref, (pl.ds(e0, et),))
+        valid = (eidx < tile_hi) & (eidx < n_edges)
+        # per-edge row via vectorized ptr compare (rows are sorted in CSR)
+        erow = jnp.sum((eidx[:, None] >= ptr[None, 1:]).astype(jnp.int32),
+                       axis=1)                                  # (et,)
+        w = fb_ref[ue >> 5]
+        in_f = ((w >> (ue.astype(jnp.uint32) & jnp.uint32(31))) & 1) == 1
+        live = jnp.logical_not(found)[jnp.clip(erow, 0, rt - 1)]
+        hit = valid & in_f & live
+        val = jnp.where(hit, col_off + ue, jnp.int32(INT_INF))
+        onehot = erow[:, None] == lanes[None, :]                # (et, rt)
+        tile_min = jnp.min(
+            jnp.where(onehot & hit[:, None], val[:, None],
+                      jnp.int32(INT_INF)), axis=0)
+        par = jnp.minimum(par, tile_min)
+        return t + 1, par, par != INT_INF
+
+    par0 = jnp.full((rt,), INT_INF, jnp.int32)
+    _, par, _ = lax.while_loop(cond, body, (jnp.int32(0), par0, completed))
+    out_ref[pl.ds(row0, rt)] = jnp.where(completed, INT_INF, par)
+
+
+def bottomup_substep_kernel(rp_seg, ue_win, f_words, cvec, col_offset,
+                            n_edges, *, rt: int = 128, et: int = 512,
+                            interpret: bool = True):
+    """(chunk+1,)(cap,)(ncw,)(chunk,) + scalars -> (chunk,) i32 parents."""
+    chunk = rp_seg.shape[0] - 1
+    rt = min(rt, chunk)
+    assert chunk % rt == 0, (chunk, rt)
+    meta = jnp.stack([jnp.asarray(col_offset, jnp.int32),
+                      jnp.asarray(n_edges, jnp.int32)])
+    grid = (chunk // rt,)
+    return pl.pallas_call(
+        functools.partial(_kernel, rt=rt, et=et),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # meta scalars
+            pl.BlockSpec(rp_seg.shape, lambda r: (0,)),  # row ptrs (VMEM)
+            pl.BlockSpec(ue_win.shape, lambda r: (0,)),  # edge window
+            pl.BlockSpec(f_words.shape, lambda r: (0,)),  # frontier bitmap
+            pl.BlockSpec(cvec.shape, lambda r: (0,)),    # completed
+        ],
+        out_specs=pl.BlockSpec(cvec.shape, lambda r: (0,)),
+        out_shape=jax.ShapeDtypeStruct((chunk,), jnp.int32),
+        interpret=interpret,
+    )(meta, rp_seg, ue_win, f_words, cvec.astype(jnp.int32))

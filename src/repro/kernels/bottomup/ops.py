@@ -1,0 +1,16 @@
+"""Jitted wrapper for the bottom-up sub-step kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bottomup.bottomup import bottomup_substep_kernel
+from repro.kernels.bottomup.ref import bottomup_substep as substep_ref
+
+
+@functools.partial(jax.jit, static_argnames=("rt", "et", "interpret"))
+def bottomup_substep(rp_seg, ue_win, f_words, cvec, col_offset, n_edges,
+                     rt: int = 128, et: int = 512, interpret: bool = True):
+    return bottomup_substep_kernel(rp_seg, ue_win, f_words, cvec, col_offset,
+                                   n_edges, rt=rt, et=et, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the table-batched EmbeddingBag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag(table, bag_ids, bag_weights=None, mode: str = "sum"):
+    """table (V, D); bag_ids (B, L) with -1 padding -> (B, D)."""
+    valid = bag_ids >= 0
+    safe = jnp.where(valid, bag_ids, 0)
+    vals = jnp.take(table, safe, axis=0)            # (B, L, D)
+    w = valid.astype(table.dtype)
+    if bag_weights is not None:
+        w = w * bag_weights
+    out = jnp.sum(vals * w[..., None], axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return out

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: plain softmax attention (causal / windowed)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, window=None, q_offset: int = 0):
+    """q: (BH, Sq, dh), k/v: (BH, Sk, dh) -> (BH, Sq, dh)."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = _softmax(s)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _softmax(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    return e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)

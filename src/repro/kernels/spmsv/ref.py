@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the top-down local discovery (Alg. 3, lines 8-10):
+SpMSV in the (select-source, min) semiring over one 2D block.
+
+The oracle is edge-parallel over the *whole* block (dense scan + masked
+scatter-min) — work-inefficient but trivially correct; the kernel must
+match it bit-for-bit on the candidate vector.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.frontier import INT_INF
+
+
+def spmsv_dense(edge_src: jnp.ndarray,   # (cap,) i32 local source col, CSC order
+                row_idx: jnp.ndarray,    # (cap,) i32 local dest row
+                nnz: jnp.ndarray,        # scalar i32 true block nnz
+                f_cj: jnp.ndarray,       # (nc,) bool frontier slice
+                nr: int,
+                col_offset: jnp.ndarray,  # scalar i32 j*nc
+                ) -> jnp.ndarray:
+    e_mask = jnp.arange(edge_src.shape[0]) < nnz
+    active = e_mask & f_cj[edge_src]
+    u_global = (col_offset + edge_src).astype(jnp.int32)
+    vals = jnp.where(active, u_global, INT_INF)
+    return jnp.full((nr,), INT_INF, jnp.int32).at[row_idx].min(vals)

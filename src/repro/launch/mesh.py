@@ -1,0 +1,43 @@
+"""Mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state.  The production
+meshes are:
+
+  single-pod : (16, 16)     axes ("data", "model")   = the paper's (pr, pc)
+  multi-pod  : (2, 16, 16)  axes ("pod", "data", "model")
+
+For BFS the ("data", "model") axes play the roles of the paper's processor
+(row, column) grid; the "pod" axis batches independent BFS roots.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# BFS axis-name aliases: the paper's pr x pc grid mapped onto the mesh.
+ROW_AXIS = "data"    # pr: processor rows   (expand/allgather axis)
+COL_AXIS = "model"   # pc: processor cols   (fold/alltoall + rotation axis)
+POD_AXIS = "pod"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(pr: int, pc: int, pods: int = 1):
+    """An arbitrary rectangular grid (the paper's generalization)."""
+    if pods > 1:
+        return jax.make_mesh((pods, pr, pc), (POD_AXIS, ROW_AXIS, COL_AXIS))
+    return jax.make_mesh((pr, pc), (ROW_AXIS, COL_AXIS))
+
+
+def make_local_mesh(pr: int = 1, pc: int = 1):
+    """Mesh over however many devices this process actually has."""
+    n = len(jax.devices())
+    if pr * pc > n:
+        raise ValueError(f"grid {pr}x{pc} needs {pr*pc} devices, have {n}")
+    devs = np.asarray(jax.devices()[: pr * pc]).reshape(pr, pc)
+    return jax.sharding.Mesh(devs, (ROW_AXIS, COL_AXIS))

@@ -1,0 +1,163 @@
+"""EXPERIMENTS.md table generation from results/dryrun/*.json.
+
+Scan correction (documented): XLA cost_analysis counts a lax.scan/while
+body ONCE.  LM steps scan layers, so raw HLO flops/bytes/in-loop
+collectives are corrected by the layer trip count with analytic per-layer
+estimates (napkin formulas below).  GNN/recsys models use unrolled Python
+layer loops — no correction.  BFS uses the separately-lowered level-step
+(no outer loop) — no correction.
+
+    PYTHONPATH=src python -m repro.launch.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def _lm_layer_correction(rec: Dict) -> Dict[str, float]:
+    """Analytic per-layer (per-device) flops/bytes for the scanned block."""
+    m = rec["meta"]
+    L = m["n_layers"]
+    n_dev = rec["n_devices"]
+    toks = m["tokens"]
+    emb = 0  # embedding outside the scan
+    p_layer = (m.get("n_active_params", m["n_params"]) - emb) / L
+    mult = 6.0 if m.get("kind") == "train" else 2.0
+    flops_layer = mult * p_layer * toks / n_dev
+    # weight traffic: fwd read + bwd read + grad write (train) or 1 read
+    w_traffic = (3.0 if m.get("kind") == "train" else 1.0) * p_layer * 2
+    # params are sharded at least over the model axis (16)
+    w_traffic /= 16
+    act = toks / max(n_dev // 16, 1) * m["d_model"] * 2 * 12
+    if m.get("kind") == "decode":
+        kv = m.get("kv_len", m.get("seq_len", 0))
+        B = m.get("global_batch", 1)
+        act += B * kv * m["d_model"] * 2 * 2 / n_dev  # KV read, sharded
+    return {"flops": flops_layer, "bytes": w_traffic + act}
+
+
+def corrected_terms(rec: Dict) -> Optional[Dict[str, float]]:
+    if rec.get("skipped"):
+        return None
+    flops = rec.get("flops", 0.0) or 0.0
+    bytes_acc = rec.get("bytes_accessed", 0.0) or 0.0
+    coll = rec.get("collectives", {})
+    total_c = coll.get("total_bytes", 0.0)
+    inloop = coll.get("inloop_bytes", 0.0)
+    meta = rec.get("meta", {})
+    n_dev = rec.get("n_devices", 256)
+    if meta.get("scan_layers"):
+        L = meta["n_layers"]
+        est = _lm_layer_correction(rec)
+        flops = flops + (L - 1) * est["flops"]
+        bytes_acc = bytes_acc + (L - 1) * est["bytes"]
+        total_c = (total_c - inloop) + L * inloop
+    t = {"compute_s": flops / PEAK_FLOPS,
+         "memory_s": bytes_acc / HBM_BW,
+         "collective_s": total_c / LINK_BW}
+    mf = model_flops(meta)
+    hlo_total = flops * n_dev
+    t["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: t[k])
+    t["model_flops"] = mf
+    t["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+    t["bound_s"] = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    t["roofline_frac"] = (t["compute_s"] / t["bound_s"]) if t["bound_s"] else 0.0
+    return t
+
+
+_NOTES = {
+    ("lm", "memory"): "raise arithmetic intensity: larger per-device batch "
+                      "or fused attention (flash kernel) to cut HBM traffic",
+    ("lm", "collective"): "overlap TP collectives with compute; reduce "
+                          "fold volume (reduce-scatter matmuls)",
+    ("lm", "compute"): "near roofline: only kernel-level MXU utilization "
+                       "gains remain",
+    ("gnn", "collective"): "replace GSPMD gather/scatter with the paper's "
+                           "2D expand/fold partition (core/spmm.py)",
+    ("gnn", "memory"): "edge-block the segment ops; cache sender features "
+                       "in VMEM tiles",
+    ("gnn", "compute"): "dense MLP-bound: fuse aggregation into the MLP",
+    ("recsys", "memory"): "embedding rows dominate: pack rows (bf16), "
+                          "batch the gather (TBE kernel)",
+    ("recsys", "collective"): "switch psum-lookup to index all_to_all "
+                              "exchange (ship ids, not dense sums)",
+    ("recsys", "compute"): "attention over 39 fields is tiny; batch more",
+    ("bfs", "collective"): "bitmap-compress the fold; overlap rotation "
+                           "with local discovery",
+    ("bfs", "memory"): "edge-stream is HBM-bound: DCSC tiling into VMEM",
+    ("bfs", "compute"): "BFS has no MXU work: memory/collective only",
+}
+
+
+def load_all():
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        recs[os.path.basename(f)[:-5]] = json.load(open(f))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| cell | mesh | compile s | args GiB/dev | temps GiB/dev | "
+            "collectives (count) | HLO flops/dev |",
+            "|---|---|---|---|---|---|---|"]
+    for tag, r in recs.items():
+        if r.get("skipped"):
+            rows.append(f"| {tag} | - | - | - | - | SKIPPED: "
+                        f"{r['reason'][:60]} | - |")
+            continue
+        mem = r.get("memory", {})
+        gib = 1 << 30
+        args = mem.get("argument_size_in_bytes", 0) / gib
+        temps = mem.get("temp_size_in_bytes", 0) / gib
+        c = r.get("collectives", {})
+        counts = ", ".join(f"{k.replace('count_', '')}:{int(v)}"
+                           for k, v in sorted(c.items())
+                           if k.startswith("count_"))
+        rows.append(
+            f"| {r['cell']} | {r['mesh']} | {r.get('compile_s', 0)} | "
+            f"{args:.2f} | {temps:.2f} | {counts or '-'} | "
+            f"{r.get('flops', 0):.3g} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = ["| cell | compute s | memory s | collective s | bound | "
+            "MODEL_FLOPS | useful ratio | what would move the bound |",
+            "|---|---|---|---|---|---|---|---|"]
+    for tag, r in recs.items():
+        if not tag.endswith("__sp") or r.get("skipped"):
+            continue
+        use = r.get("level_step", r)
+        t = corrected_terms(use)
+        if t is None:
+            continue
+        fam = use.get("meta", {}).get("family", "?")
+        note = _NOTES.get((fam, t["dominant"].replace("_s", "")), "")
+        rows.append(
+            f"| {r['cell']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+            f"{t['collective_s']:.3e} | {t['dominant'].replace('_s','')} | "
+            f"{t['model_flops']:.3g} | {t['useful_ratio']:.3f} | {note} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load_all()
+    n_ok = sum(1 for r in recs.values() if not r.get("skipped"))
+    n_skip = sum(1 for r in recs.values() if r.get("skipped"))
+    print(f"## Dry-run ({n_ok} compiled cells, {n_skip} documented skips)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16, scan-corrected)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e hardware constants (targets; the container runs CPU so these are
+analytic):  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs / (chips * peak)
+  memory term     = HLO_bytes / (chips * hbm_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+collective_bytes comes from summing operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+compiled HLO (cost_analysis does not expose it)."""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+\s*=\s*)?"
+    r"(\([^=]*\)|[\w\[\],{}\s/]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w-]*\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Sum *output* operand sizes per collective kind.  HLO shapes are
+    per-device (SPMD), so totals are per-device bytes moved.
+
+    Collectives are attributed to loop bodies vs straight-line code:
+    XLA cost analysis counts while/scan bodies ONCE, so the report must
+    multiply in-loop traffic by the trip count (``inloop_bytes``)."""
+    out: Dict[str, float] = {}
+    # attribute lines to computations: "body"-named computations are the
+    # lowering of lax.scan/while bodies
+    comp = None
+    inloop = 0.0
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if ls.endswith("{") and ("(" in ls) and not ls.startswith("ROOT"):
+            head = ls.split("(")[0].strip().lstrip("%")
+            comp = head
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0.0) + b
+        out.setdefault(f"count_{kind}", 0.0)
+        out[f"count_{kind}"] += 1
+        if comp and ("body" in comp or "while" in comp or "scan" in comp):
+            inloop += b
+    out["total_bytes"] = sum(v for k, v in out.items()
+                             if not k.startswith("count") and k != "total_bytes")
+    out["inloop_bytes"] = inloop
+    return out
+
+
+def model_flops(meta: Dict) -> float:
+    """Useful-FLOPs accounting per family (documented in EXPERIMENTS.md):
+    LM: 6*N*D (dense) / 6*N_active*D (MoE), D = tokens processed;
+        decode adds 12*L*kv_len*d_model*B attention-read FLOPs.
+    GNN: per layer ~ 2*mlp_cost(V) + 2*E*d (aggregation) * 3 (fwd+bwd).
+    Recsys: 6 * (lookup+attn+mlp params touched) * batch."""
+    fam = meta.get("family")
+    if fam == "lm":
+        n = meta.get("n_active_params") or meta["n_params"]
+        toks = meta["tokens"]
+        mult = 6.0 if meta.get("kind") == "train" else 2.0
+        return mult * n * toks
+    if fam == "gnn":
+        V, E = meta["n_nodes"], meta["n_edges"]
+        d, L = meta["d_hidden"], meta["n_layers"]
+        per_layer = 2 * V * (2 * d * d) + 2 * E * d
+        mult = 3.0   # fwd + bwd
+        return mult * (L * per_layer + 2 * V * meta.get("d_feat", d) * d)
+    if fam == "recsys":
+        B, F, d = meta["batch"], meta["n_fields"], meta["embed_dim"]
+        attn = 3 * 2 * F * F * 64 * B + 3 * 2 * F * d * 64 * B
+        mlp = 2 * B * (F * 64 * 256 + 256 * 128)
+        mult = 3.0 if meta.get("kind") == "train" else 1.0
+        base = mult * (attn + mlp)
+        if meta.get("n_candidates"):
+            base += 2.0 * meta["n_candidates"] * 64
+        return base
+    if fam == "bfs":
+        # BFS has no FLOP workload: useful work = edge examinations.
+        return float(meta.get("m", 0))
+    return 0.0
+
+
+def roofline_report(rec: Dict) -> Dict:
+    n_dev = rec.get("n_devices", 256)
+    flops = rec.get("flops", 0.0) or 0.0
+    bytes_acc = rec.get("bytes_accessed", 0.0) or 0.0
+    coll = rec.get("collectives", {}).get("total_bytes", 0.0)
+    # cost_analysis flops/bytes are per-device under SPMD on the host
+    # backend; collective bytes (from per-device HLO shapes) likewise.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec.get("meta", {}))
+    hlo_total = flops * n_dev
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else None,
+        "bound_time_s": max(terms.values()),
+    }

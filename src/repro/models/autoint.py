@@ -1,0 +1,85 @@
+"""AutoInt (Song et al. 2019): multi-head self-attention over sparse-field
+embeddings + residual, final MLP head.  Includes a two-tower retrieval
+scorer for the retrieval_cand shape (batched dot, not a loop)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.models import embedding
+from repro.models.common import ShardCtx
+
+
+def init_params(cfg: RecsysConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4 + 4 * cfg.n_attn_layers)
+    d, da, H = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    p: Dict[str, Any] = {"table": embedding.init_table(cfg, ks[0])}
+    din = d
+    for l in range(cfg.n_attn_layers):
+        p[f"wq{l}"] = jax.random.normal(ks[4 * l + 1], (din, H, da)) * (din ** -0.5)
+        p[f"wk{l}"] = jax.random.normal(ks[4 * l + 2], (din, H, da)) * (din ** -0.5)
+        p[f"wv{l}"] = jax.random.normal(ks[4 * l + 3], (din, H, da)) * (din ** -0.5)
+        p[f"wres{l}"] = jax.random.normal(ks[4 * l + 4], (din, H * da)) * (din ** -0.5)
+        din = H * da
+    dims = (cfg.n_sparse * din, *cfg.mlp_hidden, 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"mlp_w{i}"] = jax.random.normal(ks[-1], (a, b)) * (a ** -0.5)
+        p[f"mlp_b{i}"] = jnp.zeros((b,))
+    return p
+
+
+def interact(p, cfg: RecsysConfig, e):
+    """e: (B, F, d) field embeddings -> (B, F, H*da) after attn layers."""
+    x = e
+    for l in range(cfg.n_attn_layers):
+        q = jnp.einsum("bfd,dhk->bfhk", x, p[f"wq{l}"])
+        k = jnp.einsum("bfd,dhk->bfhk", x, p[f"wk{l}"])
+        v = jnp.einsum("bfd,dhk->bfhk", x, p[f"wv{l}"])
+        s = jnp.einsum("bfhk,bghk->bhfg", q, k) / jnp.sqrt(float(cfg.d_attn))
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghk->bfhk", a, v)
+        o = o.reshape(*o.shape[:2], -1)
+        x = jax.nn.relu(o + x @ p[f"wres{l}"])
+    return x
+
+
+def forward(p, cfg: RecsysConfig, idx, ctx: ShardCtx):
+    """idx: (B, F) sparse-field indices -> (B,) logits."""
+    rows = embedding.flat_indices(cfg, idx)
+    e = embedding.lookup(p["table"], rows, ctx)          # (B, F, d)
+    x = interact(p, cfg, e)
+    flat = x.reshape(x.shape[0], -1)
+    n_mlp = sum(1 for k in p if k.startswith("mlp_w"))
+    for i in range(n_mlp):
+        flat = flat @ p[f"mlp_w{i}"] + p[f"mlp_b{i}"]
+        if i < n_mlp - 1:
+            flat = jax.nn.relu(flat)
+    return flat[:, 0]
+
+
+def bce_loss(p, cfg: RecsysConfig, idx, labels, ctx: ShardCtx):
+    logits = forward(p, cfg, idx, ctx)
+    z = jax.nn.log_sigmoid(logits)
+    zn = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(labels * z + (1 - labels) * zn)
+
+
+def user_tower(p, cfg: RecsysConfig, idx, ctx: ShardCtx):
+    """Mean-pooled interacted fields -> (B, H*da) user vector."""
+    rows = embedding.flat_indices(cfg, idx)
+    e = embedding.lookup(p["table"], rows, ctx)
+    return interact(p, cfg, e).mean(axis=1)
+
+
+def retrieval_scores(user_vec, cand_table, ctx: ShardCtx):
+    """(B, D) x (Ncand, D) -> (B, Ncand) batched dot (sharded over model)."""
+    if ctx.mesh is not None:
+        from jax import lax
+        from jax.sharding import NamedSharding
+        cand_table = lax.with_sharding_constraint(
+            cand_table, NamedSharding(ctx.mesh, P("model", None)))
+    return user_vec @ cand_table.T

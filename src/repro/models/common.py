@@ -1,0 +1,122 @@
+"""Shared model building blocks: sharding context, RMSNorm, RoPE, and
+chunked (flash-style online-softmax) attention in pure jnp."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh context threaded through model code.  mesh=None disables all
+    constraints (single-device smoke tests)."""
+    mesh: Optional[object] = None
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(n for n in self.mesh.axis_names if n in ("pod", "data"))
+
+    @property
+    def tp(self) -> Optional[str]:
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return None
+        return "model"
+
+    @property
+    def tp_size(self) -> int:
+        if self.tp is None:
+            return 1
+        return self.mesh.shape["model"]
+
+    def cons(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * gamma).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]      # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_attention(q, k, v, *, q_offset, causal: bool = True,
+                      window: Optional[int] = None, kv_chunk: int = 1024,
+                      kv_valid_len=None):
+    """Online-softmax attention over KV chunks (the pure-jnp flash pattern;
+    the Pallas kernel in kernels/flash_attention mirrors this block
+    structure for the TPU).
+
+    q: (B, Sq, Hq, dh);  k,v: (B, Sk, Hkv, dh);  GQA via head repeat.
+    q_offset: scalar — absolute position of q[0] (for causal masking of
+    decode/prefill-continuation).  kv_valid_len: mask k beyond this length.
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = dh ** -0.5
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = (Sk + kv_chunk - 1) // kv_chunk
+    Sk_pad = n_chunks * kv_chunk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, dh)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, dh)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    valid_k = jnp.asarray(Sk if kv_valid_len is None else kv_valid_len)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, c = inp
+        k_pos = c * kv_chunk + jnp.arange(kv_chunk)
+        kb = jnp.repeat(kb, rep, axis=2)      # (B, C, Hq, dh)
+        vb = jnp.repeat(vb, rep, axis=2)
+        s = jnp.einsum("bqhd,bchd->bhqc", q.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        mask = (k_pos[None, :] <= q_pos[:, None]) if causal else jnp.ones(
+            (Sq, kv_chunk), bool)
+        if window is not None:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        mask = mask & (k_pos < valid_k)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, dh), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                              (kc_t, vc_t, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B, Sq, Hq, dh)

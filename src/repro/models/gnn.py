@@ -1,0 +1,193 @@
+"""GNN family: GIN, GAT, MeshGraphNet — segment-op message passing.
+
+JAX has no sparse-matrix engine beyond BCOO, so message passing is built
+on ``jax.ops.segment_sum``/``segment_max`` over an edge-index list — this
+IS part of the system (see kernel_taxonomy §GNN).  Distribution follows
+the paper's 2D edge decomposition for the full-graph shapes (see
+core/spmm.py for the shard_map expand/fold variant used by the optimized
+path); the baseline shards edges flat across the mesh and lets GSPMD
+place the scatter-add combine.
+
+Graph batches are static-shape: padded edges carry mask=0 and point at
+node 0 (their contributions are multiplied away).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import GNNConfig
+from repro.models.common import ShardCtx
+
+
+def seg_sum(x, ids, n):
+    return jax.ops.segment_sum(x, ids, num_segments=n)
+
+
+def seg_max(x, ids, n):
+    return jax.ops.segment_max(x, ids, num_segments=n)
+
+
+def _mlp_init(key, dims, name):
+    p = {}
+    ks = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"{name}_w{i}"] = jax.random.normal(ks[i], (a, b)) * (a ** -0.5)
+        p[f"{name}_b{i}"] = jnp.zeros((b,))
+    return p
+
+
+def _mlp_apply(p, name, x, n_layers, act=jax.nn.relu, final_act=False,
+               layernorm=False):
+    for i in range(n_layers):
+        x = x @ p[f"{name}_w{i}"] + p[f"{name}_b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = act(x)
+    if layernorm:
+        mu = x.mean(-1, keepdims=True)
+        var = x.var(-1, keepdims=True)
+        x = (x - mu) * lax.rsqrt(var + 1e-6)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GIN  (Xu et al. 2019): h' = MLP((1+eps)h + sum_j h_j)
+# ---------------------------------------------------------------------------
+
+
+def init_gin(cfg: GNNConfig, key, d_in: int, n_out: int):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    p: Dict[str, Any] = {}
+    d = d_in
+    for l in range(cfg.n_layers):
+        p.update(_mlp_init(ks[l], (d, cfg.d_hidden, cfg.d_hidden), f"l{l}"))
+        p[f"eps{l}"] = jnp.zeros(())
+        d = cfg.d_hidden
+    p.update(_mlp_init(ks[-1], (cfg.d_hidden, n_out), "head"))
+    return p
+
+
+def gin_forward(p, cfg: GNNConfig, x, senders, receivers, edge_mask, n: int):
+    for l in range(cfg.n_layers):
+        msg = x[senders] * edge_mask[:, None]
+        agg = seg_sum(msg, receivers, n)
+        x = _mlp_apply(p, f"l{l}", (1.0 + p[f"eps{l}"]) * x + agg, 2,
+                       final_act=True)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GAT  (Velickovic et al. 2018)
+# ---------------------------------------------------------------------------
+
+
+def init_gat(cfg: GNNConfig, key, d_in: int, n_out: int):
+    H, dh = cfg.n_heads, cfg.d_hidden
+    ks = jax.random.split(key, 2 * cfg.n_layers)
+    p: Dict[str, Any] = {}
+    d = d_in
+    for l in range(cfg.n_layers):
+        dout = n_out if l == cfg.n_layers - 1 else dh
+        p[f"W{l}"] = jax.random.normal(ks[2 * l], (d, H, dout)) * (d ** -0.5)
+        p[f"a_src{l}"] = jax.random.normal(ks[2 * l + 1], (H, dout)) * 0.1
+        p[f"a_dst{l}"] = jax.random.normal(ks[2 * l + 1], (H, dout)) * 0.1
+        d = H * dh
+    return p
+
+
+def gat_forward(p, cfg: GNNConfig, x, senders, receivers, edge_mask, n: int):
+    H = cfg.n_heads
+    for l in range(cfg.n_layers):
+        last = l == cfg.n_layers - 1
+        z = jnp.einsum("nd,dhk->nhk", x, p[f"W{l}"])
+        es = jnp.sum(z * p[f"a_src{l}"], -1)       # (N, H)
+        ed = jnp.sum(z * p[f"a_dst{l}"], -1)
+        logit = jax.nn.leaky_relu(es[senders] + ed[receivers], 0.2)
+        logit = jnp.where(edge_mask[:, None] > 0, logit, -1e30)
+        mx = seg_max(logit, receivers, n)
+        expv = jnp.exp(logit - mx[receivers]) * edge_mask[:, None]
+        den = seg_sum(expv, receivers, n)
+        alpha = expv / jnp.maximum(den[receivers], 1e-16)
+        out = seg_sum(alpha[..., None] * z[senders], receivers, n)  # (N,H,k)
+        x = out.mean(1) if last else jax.nn.elu(
+            out.reshape(n, -1))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# MeshGraphNet  (Pfaff et al. 2021): encode-process(x15)-decode
+# ---------------------------------------------------------------------------
+
+
+def init_mgn(cfg: GNNConfig, key, d_in: int, d_edge_in: int, n_out: int):
+    dh, L = cfg.d_hidden, cfg.n_layers
+    ks = jax.random.split(key, 2 * L + 3)
+    p: Dict[str, Any] = {}
+    p.update(_mlp_init(ks[0], (d_in, dh, dh), "enc_n"))
+    p.update(_mlp_init(ks[1], (d_edge_in, dh, dh), "enc_e"))
+    for l in range(L):
+        p.update(_mlp_init(ks[2 + 2 * l], (3 * dh, dh, dh), f"pe{l}"))
+        p.update(_mlp_init(ks[3 + 2 * l], (2 * dh, dh, dh), f"pn{l}"))
+    p.update(_mlp_init(ks[-1], (dh, dh, n_out), "dec"))
+    return p
+
+
+def mgn_forward(p, cfg: GNNConfig, x, e_feat, senders, receivers, edge_mask,
+                n: int):
+    h = _mlp_apply(p, "enc_n", x, 2, layernorm=True)
+    e = _mlp_apply(p, "enc_e", e_feat, 2, layernorm=True)
+    for l in range(cfg.n_layers):
+        eu = _mlp_apply(p, f"pe{l}", jnp.concatenate(
+            [e, h[senders], h[receivers]], -1), 2, layernorm=True)
+        e = e + eu
+        agg = seg_sum(e * edge_mask[:, None], receivers, n)
+        hu = _mlp_apply(p, f"pn{l}", jnp.concatenate([h, agg], -1), 2,
+                        layernorm=True)
+        h = h + hu
+    return _mlp_apply(p, "dec", h, 2)
+
+
+# ---------------------------------------------------------------------------
+# Task heads / train steps (selected per shape kind by the launcher)
+# ---------------------------------------------------------------------------
+
+
+def node_xent(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+
+
+def graph_readout_xent(node_logits, graph_ids, labels, n_graphs):
+    pooled = seg_sum(node_logits, graph_ids, n_graphs)
+    logp = jax.nn.log_softmax(pooled.astype(jnp.float32), -1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+
+
+def build_gnn_apply(cfg: GNNConfig, d_in: int, n_out: int,
+                    d_edge_in: int = 4):
+    """Returns (init_fn(key) -> params, apply_fn(params, batch) -> node out)."""
+    if cfg.model == "gin":
+        return (lambda k: init_gin(cfg, k, d_in, n_out),
+                lambda p, b: _head_gin(p, cfg, b))
+    if cfg.model == "gat":
+        return (lambda k: init_gat(cfg, k, d_in, n_out),
+                lambda p, b: gat_forward(p, cfg, b["x"], b["senders"],
+                                         b["receivers"], b["edge_mask"],
+                                         b["x"].shape[0]))
+    if cfg.model == "meshgraphnet":
+        return (lambda k: init_mgn(cfg, k, d_in, d_edge_in, n_out),
+                lambda p, b: mgn_forward(p, cfg, b["x"], b["e_feat"],
+                                         b["senders"], b["receivers"],
+                                         b["edge_mask"], b["x"].shape[0]))
+    raise ValueError(cfg.model)
+
+
+def _head_gin(p, cfg, b):
+    h = gin_forward(p, cfg, b["x"], b["senders"], b["receivers"],
+                    b["edge_mask"], b["x"].shape[0])
+    return _mlp_apply(p, "head", h, 1)

@@ -1,0 +1,71 @@
+"""Gradient compression for DP all-reduce: error-feedback top-k and int8
+quantization.  At 1000+-node scale the DP gradient all-reduce is the
+dominant fixed cost per step; top-k with error feedback (Stich et al.)
+cuts it ~(1/ratio)x while provably converging; int8 halves it with
+per-tensor scales.
+
+Compression happens *before* the cross-pod reduction: compress -> psum of
+sparse/quantized payload -> decompress; residuals stay local."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def ef_init(params: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def topk_compress(grads: Any, state: EFState, ratio: float = 0.01
+                  ) -> Tuple[Any, Any, EFState]:
+    """Returns (values, indices, new_state): per-leaf top-k magnitude
+    entries of (grad + residual); the rest accumulates into the residual
+    (error feedback)."""
+    def one(g, r):
+        gz = g.astype(jnp.float32) + r
+        flat = gz.reshape(-1)
+        k = max(1, int(flat.size * ratio))
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        picked = flat[idx]
+        new_r = flat.at[idx].set(0.0).reshape(gz.shape)
+        return picked, idx, new_r
+
+    gl, treedef = jax.tree.flatten(grads)
+    rl = jax.tree.leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(gl, rl)]
+    vals = treedef.unflatten([o[0] for o in outs])
+    idxs = treedef.unflatten([o[1] for o in outs])
+    res = treedef.unflatten([o[2] for o in outs])
+    return vals, idxs, EFState(res)
+
+
+def topk_decompress(vals: Any, idxs: Any, like: Any) -> Any:
+    def one(v, i, g):
+        flat = jnp.zeros((g.size,), jnp.float32).at[i].set(v)
+        return flat.reshape(g.shape).astype(g.dtype)
+    return jax.tree.map(one, vals, idxs, like)
+
+
+def int8_quantize(grads: Any) -> Tuple[Any, Any]:
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    gl, treedef = jax.tree.flatten(grads)
+    outs = [one(g) for g in gl]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def int8_dequantize(qs: Any, ss: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s, g: (q.astype(jnp.float32) * s).astype(g.dtype),
+        qs, ss, like)

@@ -1,0 +1,58 @@
+"""Batched serving runtime: dynamic request batching over a prefill/decode
+step pair (continuous-batching-lite).
+
+Requests queue up; the server packs up to ``max_batch`` prompts (padded to
+a shared length bucket), prefills once, then decodes round-robin until
+every request hits its token budget.  Single-process synchronous version —
+the multi-pod layout shards the batch over ("pod","data") and the serve
+steps are the same jitted fns the dry-run lowers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int = 8
+    out: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class Server:
+    prefill_fn: Callable          # (tokens (B,S)) -> (cache, logits)
+    decode_fn: Callable           # (cache, tok (B,1), pos) -> (cache, logits)
+    max_batch: int = 8
+    bucket: int = 64
+
+    def serve(self, requests: Sequence[Request]) -> List[Request]:
+        reqs = list(requests)
+        for i in range(0, len(reqs), self.max_batch):
+            self._serve_batch(reqs[i:i + self.max_batch])
+        return reqs
+
+    def _serve_batch(self, batch: List[Request]):
+        B = len(batch)
+        lens = [len(r.prompt) for r in batch]
+        S = self.bucket * ((max(lens) + self.bucket - 1) // self.bucket)
+        toks = np.zeros((self.max_batch, S), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, S - lens[i]:] = r.prompt       # left-pad to align ends
+        cache, logits = self.prefill_fn(jnp.asarray(toks))
+        outs = [[] for _ in batch]
+        n_new = max(r.max_new_tokens for r in batch)
+        pos = S
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for step in range(n_new):
+            for i in range(B):
+                outs[i].append(int(tok[i, 0]))
+            cache, logits = self.decode_fn(cache, tok, jnp.int32(pos))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            pos += 1
+        for i, r in enumerate(batch):
+            r.out = np.asarray(outs[i][: r.max_new_tokens], np.int32)

@@ -1,0 +1,46 @@
+"""Deadline-based straggler mitigation.
+
+Policy (designed for 1000+-node synchronous data parallelism, simulated
+here): track a trailing p50/p95 of step wall-times; a step breaching
+``factor * p95`` raises a straggler event.  On a real fleet the event
+triggers (a) re-dispatch of the step's work onto the hot-spare pod slice
+and (b) exclusion of the slow host from the next re-mesh (see
+ckpt/elastic.py).  The detection path — the part exercisable on CPU — is
+implemented and tested; the re-dispatch hook is injectable."""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    window: int = 50
+    factor: float = 3.0
+    min_samples: int = 5
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def __post_init__(self):
+        self._times: Deque[float] = deque(maxlen=self.window)
+        self.events: List[Tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        if len(self._times) >= self.min_samples:
+            p95 = float(np.percentile(self._times, 95))
+            if dt > self.factor * p95:
+                self.events.append((step, dt, p95))
+                if self.on_straggler is not None:
+                    self.on_straggler(step, dt, p95)
+                self._times.append(dt)
+                return True
+        self._times.append(dt)
+        return False
+
+    @property
+    def deadline(self) -> Optional[float]:
+        if len(self._times) < self.min_samples:
+            return None
+        return self.factor * float(np.percentile(self._times, 95))

@@ -1,0 +1,39 @@
+"""Multi-device distributed BFS system tests.
+
+Each case runs in a subprocess with XLA_FLAGS forcing N host devices —
+the pytest process itself keeps the default single device (the dry-run
+instructions require that smoke tests see 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(__file__)
+_MAIN = os.path.join(_HERE, "_dist_bfs_main.py")
+
+
+def _run(n_dev, mode, timeout=1200):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, _MAIN, str(n_dev), mode],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"{mode} failed:\n{r.stdout}\n{r.stderr}"
+    assert f"OK {mode}" in r.stdout
+
+
+@pytest.mark.parametrize("mode", ["grids", "kernel", "counters",
+                                  "multiroot", "optimized", "multipod"])
+def test_distributed_bfs(mode):
+    _run(16, mode)
+
+
+def test_distributed_spmm():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    main = os.path.join(_HERE, "_dist_spmm_main.py")
+    r = subprocess.run([sys.executable, main], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "OK spmm" in r.stdout

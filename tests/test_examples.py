@@ -1,0 +1,52 @@
+"""End-to-end example drivers run as tests (the fast ones in-process,
+the rest as subprocesses)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_ENV = {**os.environ, "PYTHONPATH": os.path.join(_ROOT, "src")}
+_ENV.pop("XLA_FLAGS", None)
+
+
+def _run(args, timeout=1500):
+    r = subprocess.run([sys.executable] + args, capture_output=True,
+                       text=True, timeout=timeout, env=_ENV, cwd=_ROOT)
+    assert r.returncode == 0, f"{args}:\n{r.stdout[-1500:]}\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_quickstart():
+    out = _run(["examples/quickstart.py"])
+    assert "valid tree: True" in out
+
+
+def test_graph500_driver():
+    out = _run(["examples/graph500_bfs.py", "--scale", "11", "--roots", "4",
+                "--grid", "1x1"])
+    assert "harmonic-mean TEPS" in out
+
+
+def test_serve_example():
+    out = _run(["examples/serve_lm.py"])
+    assert "served 6 requests" in out
+
+
+def test_train_lm_example(tmp_path):
+    out = _run(["examples/train_lm.py", "--steps", "12", "--batch", "2",
+                "--seq", "64", "--d-model", "64", "--layers", "2",
+                "--ckpt-dir", str(tmp_path / "lm_ck")])
+    assert "trained" in out
+
+
+def test_gnn_full_graph_example():
+    out = _run(["examples/gnn_full_graph.py"])
+    assert "matches segment_sum oracle" in out
+
+
+def test_train_launcher_recsys(tmp_path):
+    out = _run(["-m", "repro.launch.train", "--arch", "autoint",
+                "--steps", "8", "--ckpt-dir", str(tmp_path / "ai_ck")])
+    assert "autoint: 8 steps" in out

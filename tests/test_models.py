@@ -1,0 +1,167 @@
+"""Per-arch smoke tests: REDUCED configs of the same family, one
+forward/train step on CPU, asserting shapes + no NaNs.  (Full configs are
+exercised only via the dry-run per the instructions.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (GNNShape, get_config, list_archs, reduced)
+from repro.graph.datasets import build_gnn_batch
+from repro.models import autoint as ai
+from repro.models import gnn as gnn_mod
+from repro.models import mace as mace_mod
+from repro.models import transformer as tf
+from repro.models.common import ShardCtx
+from repro.optim.adamw import AdamW
+
+CTX = ShardCtx(mesh=None)
+KEY = jax.random.PRNGKey(0)
+
+LM_ARCHS = ["stablelm-3b", "smollm-135m", "starcoder2-7b",
+            "qwen3-moe-30b-a3b", "mixtral-8x22b"]
+
+
+def _reduced_lm(arch):
+    cfg = get_config(arch)
+    kw = dict(n_layers=2, d_model=64, d_ff=128, vocab=211, d_head=16)
+    if cfg.n_heads % 4 == 0:
+        kw.update(n_heads=4, n_kv_heads=max(cfg.n_kv_heads * 4 // cfg.n_heads, 1))
+    else:
+        kw.update(n_heads=3, n_kv_heads=1)
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, n_experts=4, top_k=2,
+                                        d_ff_expert=32)
+    if cfg.swa_window:
+        kw["swa_window"] = 8
+    return reduced(cfg, **kw)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_arch_smoke(arch):
+    cfg = _reduced_lm(arch)
+    p = tf.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 17), 0, cfg.vocab)
+    opt = AdamW(lr=1e-3)
+    ost = opt.init(p)
+
+    def step(p, ost, t):
+        loss, g = jax.value_and_grad(
+            lambda p_: tf.lm_loss(p_, t[:, :-1], t[:, 1:], cfg, CTX,
+                                  seq_chunk=8))(p)
+        p, ost = opt.update(g, ost, p)
+        return p, ost, loss
+
+    p, ost, loss = jax.jit(step)(p, ost, toks)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    # decode step shape
+    cache = tf.init_kv_cache(cfg, 2, 32)
+    cache, logits = tf.decode_step(p, cache, toks[:, :1], jnp.int32(0),
+                                   cfg, CTX)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+GNN_ARCHS = ["gin-tu", "gat-cora", "meshgraphnet"]
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+@pytest.mark.parametrize("shape_name", ["full_graph_sm", "molecule"])
+def test_gnn_arch_smoke(arch, shape_name):
+    cfg = get_config(arch)
+    shape = next(s for s in cfg.shapes if s.name == shape_name)
+    b = build_gnn_batch(cfg, shape, reduce_to=16, seed=1)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    d_in = b["x"].shape[1]
+    init, apply = gnn_mod.build_gnn_apply(cfg, d_in, cfg.n_classes)
+    p = init(KEY)
+
+    def loss_fn(p):
+        out = apply(p, b)
+        if shape.kind == "batched":
+            ng = int(b["labels"].shape[0])
+            return gnn_mod.graph_readout_xent(out, b["graph_ids"],
+                                              b["labels"], ng)
+        if arch == "meshgraphnet":
+            return jnp.mean((out[:, :3] - b["targets"]) ** 2)
+        return gnn_mod.node_xent(out, b["labels"],
+                                 jnp.ones(out.shape[0]))
+
+    loss, g = jax.jit(jax.value_and_grad(loss_fn))(p)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_mace_smoke_and_equivariance():
+    cfg = reduced(get_config("mace"), d_hidden=16)
+    shape = GNNShape("tiny", 20, 40, kind="full")
+    b = build_gnn_batch(cfg, shape, seed=3)
+    p = mace_mod.init_mace(cfg, KEY, n_species=8)
+    args = (jnp.asarray(b["species"]), jnp.asarray(b["pos"]),
+            jnp.asarray(b["senders"]), jnp.asarray(b["receivers"]),
+            jnp.asarray(b["edge_mask"]), jnp.asarray(b["graph_ids"]), 1)
+    e0 = mace_mod.mace_energy(p, cfg, *args)
+    assert np.isfinite(np.asarray(e0)).all()
+    # E(3) invariance: random rotation + translation leaves energy fixed
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    pos2 = b["pos"] @ Q.T + rng.normal(size=(1, 3))
+    e1 = mace_mod.mace_energy(p, cfg, args[0], jnp.asarray(pos2.astype(
+        np.float32)), *args[2:])
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e0), rtol=2e-4)
+    # gradient (forces) flow
+    g = jax.grad(lambda pos: mace_mod.mace_energy(
+        p, cfg, args[0], pos, *args[2:]).sum())(jnp.asarray(b["pos"]))
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_autoint_smoke():
+    cfg = reduced(get_config("autoint"), n_sparse=8, embed_dim=8,
+                  n_attn_layers=2, n_heads=2, d_attn=8,
+                  vocab_sizes=tuple([50] * 8), mlp_hidden=(32,))
+    p = ai.init_params(cfg, KEY)
+    idx = jax.random.randint(KEY, (16, 8), 0, 50)
+    labels = jnp.asarray(np.random.default_rng(0).integers(0, 2, 16),
+                         jnp.float32)
+    loss, g = jax.jit(jax.value_and_grad(
+        lambda p_: ai.bce_loss(p_, cfg, idx, labels, CTX)))(p)
+    assert np.isfinite(float(loss))
+    # retrieval scoring: 1 query x many candidates, batched dot
+    u = ai.user_tower(p, cfg, idx[:1], CTX)
+    cand = jax.random.normal(KEY, (1000, u.shape[-1]))
+    s = ai.retrieval_scores(u, cand, CTX)
+    assert s.shape == (1, 1000) and np.isfinite(np.asarray(s)).all()
+
+
+def test_all_archs_registered():
+    archs = set(list_archs())
+    want = {"stablelm-3b", "smollm-135m", "starcoder2-7b",
+            "qwen3-moe-30b-a3b", "mixtral-8x22b", "mace", "gin-tu",
+            "gat-cora", "meshgraphnet", "autoint", "bfs-rmat",
+            "bfs-rmat-csr", "bfs-rmat-topdown"}
+    assert want <= archs, want - archs
+
+
+def test_sampler_tree_shapes():
+    from repro.graph.sampler import khop_sample
+    rng = np.random.default_rng(0)
+    n = 200
+    deg = rng.integers(0, 8, n)
+    rp = np.zeros(n + 1, np.int32)
+    rp[1:] = np.cumsum(deg)
+    ci = rng.integers(0, n, int(rp[-1])).astype(np.int32)
+    seeds = jnp.asarray(rng.integers(0, n, 16), jnp.int32)
+    out = jax.jit(lambda k, s: khop_sample(k, jnp.asarray(rp),
+                                           jnp.asarray(ci), s, (5, 3)))(
+        KEY, seeds)
+    assert out["node_ids"].shape == (16 + 80 + 240,)
+    assert out["senders"].shape == out["receivers"].shape == (320,)
+    # receivers always point at earlier layers (tree property)
+    assert (np.asarray(out["receivers"]) < 16 + 80).all()
+    assert (np.asarray(out["senders"]) >= 16).all()

@@ -1,0 +1,23 @@
+"""Multi-device NN-substrate tests (subprocess, forced device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(__file__)
+_MAIN = os.path.join(_HERE, "_dist_nn_main.py")
+
+
+@pytest.mark.parametrize("mode,n_dev", [
+    ("moe_ep", 8), ("embedding", 8), ("dp_compress", 4),
+    ("elastic_graph", 16),
+])
+def test_distributed_nn(mode, n_dev):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, _MAIN, str(n_dev), mode],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    assert r.returncode == 0, f"{mode}:\n{r.stdout}\n{r.stderr[-3000:]}"
+    assert f"OK {mode}" in r.stdout

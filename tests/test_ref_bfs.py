@@ -1,0 +1,67 @@
+"""Sequential-oracle tests: Alg. 1 (top-down) vs Alg. 2 (bottom-up)
+produce identical reachability/depths on random graphs (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ref import (bfs_bottomup, bfs_depths, bfs_topdown,
+                            validate_parents)
+from repro.graph.rmat import preprocess, rmat_graph
+
+
+def _depths_from_parents(n, parent, root):
+    depth = np.full(n, -1, np.int64)
+    depth[root] = 0
+    # iterate: child depth = parent depth + 1 (tree has <= n levels)
+    for _ in range(n):
+        upd = (depth == -1) & (parent >= 0) & (depth[parent] >= 0)
+        if not upd.any():
+            break
+        depth[upd] = depth[parent[upd]] + 1
+    return depth
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_topdown_equals_bottomup(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 40))
+    m = int(rng.integers(1, 4 * n))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    e = preprocess(src, dst, n, symmetrize=bool(rng.integers(0, 2)))
+    if e.m == 0:
+        return
+    root = int(e.src[0])
+    p_td = bfs_topdown(n, e.src, e.dst, root)
+    p_bu = bfs_bottomup(n, e.src, e.dst, root)
+    d = bfs_depths(n, e.src, e.dst, root)
+    assert np.array_equal(p_td >= 0, d >= 0)
+    assert np.array_equal(p_bu >= 0, d >= 0)
+    for p in (p_td, p_bu):
+        ok, msg = validate_parents(n, e.src, e.dst, root, p)
+        assert ok, msg
+        assert np.array_equal(_depths_from_parents(n, p, root), d)
+
+
+def test_rmat_shape_and_skew():
+    e = rmat_graph(10, edge_factor=8, seed=2)
+    assert e.n == 1024
+    assert e.m > 0 and e.m_input == 8 * 1024
+    deg = e.out_degrees()
+    # R-MAT must be skewed: max degree far above mean
+    assert deg.max() > 4 * deg.mean()
+    # symmetric after preprocessing
+    key = set(zip(e.src.tolist(), e.dst.tolist()))
+    assert all((d, s) in key for s, d in list(key)[:500])
+
+
+def test_validate_catches_bad_tree():
+    e = rmat_graph(8, edge_factor=8, seed=2)
+    root = int(e.src[0])
+    p = bfs_topdown(e.n, e.src, e.dst, root)
+    bad = p.copy()
+    v = int(np.flatnonzero((bad >= 0) & (np.arange(e.n) != root))[0])
+    bad[v] = v  # self-parent on a non-root vertex: invalid tree edge
+    ok, _ = validate_parents(e.n, e.src, e.dst, root, bad)
+    assert not ok
