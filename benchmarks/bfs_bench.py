@@ -34,3 +34,26 @@ def run_worker(payload: Dict, n_devices: int = 16, timeout: int = 2400) -> Dict:
     if r.returncode != 0:
         raise RuntimeError(f"worker failed: {r.stderr[-2000:]}")
     return json.loads(r.stdout.splitlines()[-1])
+
+
+_PHASES = ("wire_transpose", "wire_expand", "wire_fold", "wire_rotate",
+           "wire_updates")
+
+
+def sweep_decompositions(scale: int, grid, n_devices: int = 16,
+                         roots: int = 4, **payload_kw) -> List[Dict]:
+    """Run the same R-MAT graph through both decompositions on the same
+    device count (1D uses p = pr*pc strips) and emit one CSV row per
+    decomposition with TEPS + per-phase wire counters — the measured
+    side of the paper's Eq. 2 comparison."""
+    out = []
+    for decomp in ("1d", "2d"):
+        res = run_worker({"scale": scale, "grid": list(grid),
+                          "roots": roots, "decomposition": decomp,
+                          **payload_kw}, n_devices=n_devices)
+        ctr = res["counters"] or {}
+        phases = ";".join(f"{k}={ctr.get(k, 0.0):.3e}" for k in _PHASES)
+        emit(f"bfs_s{scale}_{decomp}_{grid[0]}x{grid[1]}",
+             res["hmean_s"] * 1e6, f"teps={res['teps']:.3e};{phases}")
+        out.append(res)
+    return out

@@ -12,9 +12,9 @@ def main():
     from repro.configs.base import BFSConfig
     from repro.core.bfs import run_bfs, make_bfs_fn
     from repro.core.ref import validate_parents
-    from repro.graph.formats import build_blocked
+    from repro.graph.formats import build_blocked, build_blocked_1d
     from repro.graph.rmat import rmat_graph, scale_free_standin, random_source
-    from repro.launch.mesh import make_local_mesh
+    from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
     import jax
 
     if payload.get("graph") == "twitter_standin":
@@ -23,20 +23,30 @@ def main():
         edges = rmat_graph(payload["scale"], payload.get("degree", 16),
                            seed=payload.get("seed", 1))
     pr, pc = payload["grid"]
-    g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
-    mesh = make_local_mesh(pr, pc)
-    cfg = BFSConfig(storage=payload.get("storage", "dcsc"),
+    decomp = payload.get("decomposition", "2d")
+    cfg = BFSConfig(decomposition=decomp,
+                    storage=payload.get("storage", "dcsc"),
                     fold_mode=payload.get("fold_mode", "reduce"),
                     direction_optimizing=payload.get("diropt", True))
     rng = np.random.default_rng(0)
     roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
 
-    # build once, time many (excludes compile)
-    part = g.part
-    fn, keys = make_bfs_fn(mesh, part, cfg, g.cap_seg,
-                           maxdeg=g.maxdeg_col)
+    # build once, time many (excludes compile); a 1d run reuses the same
+    # grid spec as p = pr*pc strips so sweeps pair up on identical graphs
     from jax.sharding import NamedSharding, PartitionSpec as P
-    sh = NamedSharding(mesh, P("data", "model"))
+    if decomp == "1d":
+        g = build_blocked_1d(edges, pr * pc, align=32, cap_pad=32)
+        mesh = make_local_mesh_1d(pr * pc)
+        part = g.part
+        fn, keys = make_bfs_fn(mesh, part, cfg)
+        sh = NamedSharding(mesh, P("data"))
+    else:
+        g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
+        mesh = make_local_mesh(pr, pc)
+        part = g.part
+        fn, keys = make_bfs_fn(mesh, part, cfg, g.cap_seg,
+                               maxdeg=g.maxdeg_col)
+        sh = NamedSharding(mesh, P("data", "model"))
     arrs = g.device_arrays()
     gdev = {k: jax.device_put(np.asarray(arrs[k]), sh) for k in keys}
     fn(gdev, roots[0])[0].block_until_ready()          # warmup/compile
@@ -53,12 +63,16 @@ def main():
                 np.asarray(pi).reshape(part.n)[: part.n_orig])
             assert ok, msg
     hmean = len(times) / sum(1.0 / t for t in times)
+    if decomp == "1d":
+        mem = {"mem_1d": g.storage_words()}
+    else:
+        mem = {"mem_csr": g.storage_words("csr"),
+               "mem_dcsc": g.storage_words("dcsc")}
     print(json.dumps({
         "hmean_s": hmean, "times": times, "m_input": edges.m_input,
         "m": edges.m, "n": edges.n, "counters": counters,
-        "teps": edges.m_input / hmean,
-        "mem_csr": g.storage_words("csr"),
-        "mem_dcsc": g.storage_words("dcsc"),
+        "decomposition": decomp,
+        "teps": edges.m_input / hmean, **mem,
     }))
 
 

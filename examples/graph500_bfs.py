@@ -7,6 +7,10 @@ TEPS, validate every tree, compare comm volume to the §6 model.
 Multi-device grids need forced host devices, e.g.:
     XLA_FLAGS=--xla_force_host_platform_device_count=16 \
         PYTHONPATH=src python examples/graph500_bfs.py --grid 4x4
+
+``--decomposition 1d`` runs the paper's 1D row-strip baseline on
+p = pr*pc strips of the same graph (the Eq. 2 comparison axis):
+    ... examples/graph500_bfs.py --grid 4x4 --decomposition 1d
 """
 import argparse
 import time
@@ -18,9 +22,9 @@ from repro.core import comm_model
 from repro.core.bfs import run_bfs
 from repro.core.metrics import harmonic_mean, teps
 from repro.core.ref import validate_parents
-from repro.graph.formats import build_blocked
+from repro.graph.formats import build_blocked, build_blocked_1d
 from repro.graph.rmat import random_source, rmat_graph
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
 
 
 def main():
@@ -29,13 +33,19 @@ def main():
     ap.add_argument("--grid", default="1x1")
     ap.add_argument("--roots", type=int, default=16)
     ap.add_argument("--no-diropt", action="store_true")
+    ap.add_argument("--decomposition", choices=("1d", "2d"), default="2d")
     args = ap.parse_args()
     pr, pc = map(int, args.grid.split("x"))
 
     edges = rmat_graph(args.scale, 16, seed=1)
-    graph = build_blocked(edges, pr, pc, align=32)
-    mesh = make_local_mesh(pr, pc)
-    cfg = BFSConfig(direction_optimizing=not args.no_diropt)
+    if args.decomposition == "1d":
+        graph = build_blocked_1d(edges, pr * pc, align=32)
+        mesh = make_local_mesh_1d(pr * pc)
+    else:
+        graph = build_blocked(edges, pr, pc, align=32)
+        mesh = make_local_mesh(pr, pc)
+    cfg = BFSConfig(decomposition=args.decomposition,
+                    direction_optimizing=not args.no_diropt)
     rng = np.random.default_rng(0)
 
     rates, res = [], None
@@ -53,9 +63,16 @@ def main():
     print(f"\nharmonic-mean TEPS over {args.roots} roots: "
           f"{harmonic_mean(rates):.3e}")
     useful = sum(v for k, v in res.counters.items() if k.startswith('use_'))
-    wt = comm_model.topdown_words(graph.part.n, edges.m, pr, pc)
-    print(f"useful words (last search): {useful:.3e}  "
-          f"(pure top-down model w_t={wt:.3e})")
+    if args.decomposition == "1d":
+        wt = comm_model.topdown_1d_words(edges.m, pr * pc)
+        we = comm_model.expand_1d_words(graph.part.n, pr * pc, res.n_levels)
+        print(f"useful words (last search): {useful:.3e}  "
+              f"(1d top-down model w={wt:.3e}; wire_expand measured "
+              f"{res.counters['wire_expand']:.3e} vs model {we:.3e})")
+    else:
+        wt = comm_model.topdown_words(graph.part.n, edges.m, pr, pc)
+        print(f"useful words (last search): {useful:.3e}  "
+              f"(pure top-down model w_t={wt:.3e})")
 
 
 if __name__ == "__main__":

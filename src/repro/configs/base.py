@@ -211,6 +211,9 @@ class RecsysConfig:
 @dataclass(frozen=True)
 class BFSConfig:
     arch: str = "bfs-rmat"
+    # "2d" checkerboard (paper §4) | "1d" row strips (Alg. 1/2 baseline).
+    # 1D has no fold/transpose phases: storage/fold_mode only apply to 2D.
+    decomposition: str = "2d"
     storage: str = "csr"          # "csr" | "dcsc"
     # fold: "alltoall" (paper-faithful) | "reduce" (ring RS) |
     #       "bitmap"/"bitmap_pure" (beyond-paper compact fold)

@@ -25,3 +25,11 @@ CONFIG_OPT_RT = register(dataclasses.replace(
 # batched roots sharded over the pod axis (multi-pod Graph500 pattern)
 CONFIG_MULTIROOT = register(dataclasses.replace(
     CONFIG, arch="bfs-rmat-multiroot"))
+
+# --- 1D row-decomposition baseline (the paper's comparison axis) ---
+# Same R-MAT shapes and direction-optimizing heuristics; the benchmark
+# harness sweeps bfs-rmat vs bfs-rmat-1d on identical graphs for the
+# Eq. 2 wire-volume comparison.
+CONFIG_1D = register(BFSConfig(arch="bfs-rmat-1d", decomposition="1d"))
+CONFIG_1D_TOPDOWN = register(dataclasses.replace(
+    CONFIG_1D, arch="bfs-rmat-1d-topdown", direction_optimizing=False))

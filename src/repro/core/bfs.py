@@ -1,9 +1,17 @@
-"""Public distributed-BFS API: direction-optimizing 2D BFS (paper §4.4).
+"""Public distributed-BFS API: direction-optimizing BFS in either the 1D
+row decomposition (paper Alg. 1/2 distributed baseline) or the 2D
+checkerboard (paper §4.4), selected by ``BFSConfig.decomposition``
+("1d" | "2d").
 
-The whole search (level loop + direction switching + both step kinds) is a
-single shard_map'd, jitted program over mesh axes (row, col) = (pr, pc).
-Direction switching uses the Beamer heuristics the paper cites (§4.4):
-top-down -> bottom-up when m_f > m_u/alpha, back when n_f < n/beta.
+The whole search (level loop + direction switching + both step kinds) is
+a single shard_map'd, jitted program — over mesh axes (row, col) =
+(pr, pc) for 2D, over the single row axis of size p for 1D.  Direction
+switching uses the Beamer heuristics the paper cites (§4.4): top-down ->
+bottom-up when m_f > m_u/alpha, back when n_f < n/beta; the level loop,
+heuristics, per-level stats, and COUNTER_KEYS accounting are shared
+between the decompositions (``_search_loop``), so 1D-vs-2D wire-volume
+comparisons (the paper's Eq. 2) read identical counter dicts out of
+``BFSResult.counters``.
 """
 from __future__ import annotations
 
@@ -19,9 +27,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import BFSConfig
 from repro.core import steps
-from repro.core.partition import Partition2D
+from repro.core.compat import shard_map
+from repro.core.partition import Partition1D, Partition2D
 from repro.core.steps import LevelArgs, bottomup_level, topdown_level, zero_counters
-from repro.graph.formats import BlockedGraph
+from repro.core.steps_1d import (LevelArgs1D, bottomup_level_1d,
+                                 topdown_level_1d)
+from repro.graph.formats import Blocked1DGraph, BlockedGraph
 
 MAX_LEVELS = 64
 
@@ -30,6 +41,8 @@ _DENSE_KEYS = ("edge_src", "row_idx", "nnz", "deg_A", "col_idx", "row_ptr",
                "seg_ptr", "edge_dst")
 _KERNEL_KEYS = ("col_ptr", "row_idx", "jc", "cp", "nzc", "nnz", "deg_A",
                 "col_idx", "row_ptr", "seg_ptr")
+_DENSE_KEYS_1D = ("edge_src", "row_idx", "nnz", "deg_A", "col_idx",
+                  "row_ptr", "edge_dst")
 
 
 @dataclass
@@ -40,20 +53,12 @@ class BFSResult:
     level_stats: np.ndarray      # (MAX_LEVELS, 4): n_f, m_f, mode, used
 
 
-def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
-              n_real_edges: float, sync_axis: Optional[str] = None):
-    """sync_axis: when searches run batched across an outer axis (pods),
-    the level loop must take the same trip count on every slice — the
-    loop continues while ANY slice has a live frontier (idle slices run
-    empty levels; collectives stay aligned)."""
-    pr, pc, chunk = part.pr, part.pc, part.chunk
-    axes = (args.row_axis, args.col_axis)
-    sync = axes + ((sync_axis,) if sync_axis else ())
-    i = lax.axis_index(args.row_axis)
-    j = lax.axis_index(args.col_axis)
-    g = {k: v[0, 0] for k, v in g.items()}
-
-    gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
+def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
+                 sync, td_level, bu_level):
+    """The decomposition-agnostic whole-search level loop: frontier-size /
+    edge-mass heuristics, per-level stats, counter accumulation.
+    ``td_level`` / ``bu_level`` are (pi, front) -> (pi, front, ctr) step
+    closures over the local graph ``g`` (already squeezed)."""
     pi0 = jnp.where(gidx == root, root, jnp.int32(-1))
     front0 = gidx == root
     stats0 = jnp.zeros((MAX_LEVELS, 4), jnp.float32)
@@ -70,7 +75,7 @@ def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
                                dtype=jnp.float32), axes)
         if cfg.direction_optimizing:
             go_bu = (mode == 0) & (m_f > m_u / cfg.alpha)
-            go_td = (mode == 1) & (n_f < part.n / cfg.beta)
+            go_td = (mode == 1) & (n_f < n_total / cfg.beta)
             new_mode = jnp.where(go_bu, 1, jnp.where(go_td, 0, mode))
         else:
             new_mode = mode
@@ -80,8 +85,8 @@ def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
 
         pi2, front2, c2 = lax.cond(
             new_mode == 1,
-            lambda pf: bottomup_level(g, pf[0], pf[1], args),
-            lambda pf: topdown_level(g, pf[0], pf[1], args),
+            lambda pf: bu_level(pf[0], pf[1]),
+            lambda pf: td_level(pf[0], pf[1]),
             (pi, front))
         ctr = {k: ctr[k] + c2[k] for k in ctr}
         n_f2 = lax.psum(jnp.sum(front2, dtype=jnp.float32), axes)
@@ -93,15 +98,86 @@ def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
     st = (pi0, front0, jnp.int32(0), jnp.int32(0), jnp.float32(1.0),
           zero_counters(), stats0)
     pi, front, mode, level, n_f, ctr, stats = lax.while_loop(cond, body, st)
+    return pi, level, ctr, stats
+
+
+def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
+              n_real_edges: float, sync_axis: Optional[str] = None):
+    """sync_axis: when searches run batched across an outer axis (pods),
+    the level loop must take the same trip count on every slice — the
+    loop continues while ANY slice has a live frontier (idle slices run
+    empty levels; collectives stay aligned)."""
+    pc, chunk = part.pc, part.chunk
+    axes = (args.row_axis, args.col_axis)
+    sync = axes + ((sync_axis,) if sync_axis else ())
+    i = lax.axis_index(args.row_axis)
+    j = lax.axis_index(args.col_axis)
+    g = {k: v[0, 0] for k, v in g.items()}
+
+    gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
+    pi, level, ctr, stats = _search_loop(
+        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
+        td_level=lambda pi, f: topdown_level(g, pi, f, args),
+        bu_level=lambda pi, f: bottomup_level(g, pi, f, args))
     return pi[None, None], level, ctr, stats
 
 
-def make_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig, cap_seg: int,
+def _bfs_body_1d(g, root, *, part: Partition1D, args: LevelArgs1D,
+                 cfg: BFSConfig, sync_axis: Optional[str] = None):
+    """1D row-decomposition whole-search body over the single mesh axis."""
+    axes = (args.axis,)
+    sync = axes + ((sync_axis,) if sync_axis else ())
+    i = lax.axis_index(args.axis)
+    g = {k: v[0] for k, v in g.items()}
+
+    gidx = (i * part.chunk + jnp.arange(part.chunk)).astype(jnp.int32)
+    pi, level, ctr, stats = _search_loop(
+        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
+        td_level=lambda pi, f: topdown_level_1d(g, pi, f, args),
+        bu_level=lambda pi, f: bottomup_level_1d(g, pi, f, args))
+    return pi[None], level, ctr, stats
+
+
+def make_bfs_fn_1d(mesh, part: Partition1D, cfg: BFSConfig,
+                   axis: str = "data", local_mode: str = "dense"):
+    """Build the jitted whole-search 1D BFS function.  Returns
+    fn(graph_arrays_dict, root) -> (pi, level, ctr, stats)."""
+    if local_mode != "dense":
+        raise ValueError(
+            "1d decomposition supports local_mode='dense' only (a per-"
+            "strip col_ptr would be O(n) per processor; see formats.py)")
+    args = LevelArgs1D(part=part, axis=axis,
+                       use_edge_dst=cfg.use_edge_dst)
+    body = functools.partial(_bfs_body_1d, part=part, args=args, cfg=cfg)
+    gspec = {k: P(axis) for k in _DENSE_KEYS_1D}
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(gspec, P()),
+        out_specs=(P(axis), P(), {k: P() for k in steps.COUNTER_KEYS}, P()),
+        check_vma=False)
+    return jax.jit(mapped), _DENSE_KEYS_1D
+
+
+def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
                 row_axis: str = "data", col_axis: str = "model",
                 local_mode: str = "dense", n_real_edges: float = 0.0,
                 maxdeg: int = 0, cap_f: int = 0):
     """Build the jitted whole-search BFS function for a given mesh/graph
-    geometry.  Returns fn(graph_arrays_dict, root) -> (pi, level, ctr, stats)."""
+    geometry, dispatching on ``cfg.decomposition`` ("1d" | "2d"; the 1D
+    path uses ``row_axis`` as its single mesh axis and ignores the fold/
+    transpose knobs).  Returns fn(graph_arrays_dict, root) ->
+    (pi, level, ctr, stats)."""
+    if getattr(cfg, "decomposition", "2d") == "1d":
+        if not isinstance(part, Partition1D):
+            raise TypeError(f"decomposition='1d' needs a Partition1D, "
+                            f"got {type(part).__name__}")
+        return make_bfs_fn_1d(mesh, part, cfg, axis=row_axis,
+                              local_mode=local_mode)
+    if cap_seg <= 0:
+        # the bottom-up branch always compiles (lax.cond), and a zero
+        # edge window would silently discover nothing
+        raise ValueError("2d decomposition needs cap_seg > 0 "
+                         "(pass graph.cap_seg)")
     args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
                      fold_mode=cfg.fold_mode,
                      perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
@@ -113,7 +189,7 @@ def make_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig, cap_seg: int,
     body = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
                              n_real_edges=n_real_edges)
     gspec = {k: P(row_axis, col_axis) for k in keys}
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body, mesh=mesh,
         in_specs=(gspec, P()),
         out_specs=(P(row_axis, col_axis), P(), {
@@ -149,7 +225,7 @@ def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
         return pis[None, None], levels
 
     gspec = {k: P(row_axis, col_axis) for k in _DENSE_KEYS}
-    mapped = jax.shard_map(
+    mapped = shard_map(
         multi_body, mesh=mesh,
         in_specs=(gspec, P(pod_axis)),
         out_specs=(P(row_axis, col_axis, pod_axis, None), P(pod_axis)),
@@ -157,16 +233,32 @@ def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
     return jax.jit(mapped), _DENSE_KEYS
 
 
-def run_bfs(graph: BlockedGraph, root: int, cfg: BFSConfig, mesh,
+def run_bfs(graph, root: int, cfg: BFSConfig, mesh,
             row_axis: str = "data", col_axis: str = "model",
             local_mode: str = "dense") -> BFSResult:
-    """End-to-end convenience wrapper: ship blocks, run, validate shapes."""
+    """End-to-end convenience wrapper: ship blocks, run, validate shapes.
+
+    ``graph`` is a BlockedGraph (2D) or Blocked1DGraph (1D); which one
+    must match ``cfg.decomposition``.  The returned BFSResult is
+    layout-independent (parents indexed by global vertex id, counters in
+    the shared COUNTER_KEYS units), so callers can diff 1D vs 2D runs
+    directly."""
     part = graph.part
-    fn, keys = make_bfs_fn(mesh, part, cfg, graph.cap_seg, row_axis,
-                           col_axis, local_mode, n_real_edges=graph.m,
-                           maxdeg=graph.maxdeg_col)
+    one_d = getattr(cfg, "decomposition", "2d") == "1d"
+    if one_d != isinstance(graph, Blocked1DGraph):
+        raise TypeError(
+            f"cfg.decomposition={cfg.decomposition!r} does not match "
+            f"graph type {type(graph).__name__}")
+    if one_d:
+        fn, keys = make_bfs_fn(mesh, part, cfg, row_axis=row_axis,
+                               local_mode=local_mode)
+        sh = NamedSharding(mesh, P(row_axis))
+    else:
+        fn, keys = make_bfs_fn(mesh, part, cfg, graph.cap_seg, row_axis,
+                               col_axis, local_mode, n_real_edges=graph.m,
+                               maxdeg=graph.maxdeg_col)
+        sh = NamedSharding(mesh, P(row_axis, col_axis))
     arrays = graph.device_arrays()
-    sh = NamedSharding(mesh, P(row_axis, col_axis))
     gdev = {k: jax.device_put(np.asarray(arrays[k]), sh) for k in keys}
     pi, level, ctr, stats = fn(gdev, jnp.int32(root))
     pi = np.asarray(pi).reshape(part.n)[: part.n_orig]

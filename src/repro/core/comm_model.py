@@ -26,6 +26,28 @@ def ratio_eq2(k: float, pc: int, s_b: float = 4.0) -> float:
     return (pc + 4.0 * k) / (s_b * (2.0 * pc + 1.0) / 64.0 + 2.0)
 
 
+# ---------------------------------------------------------------------------
+# 1D row decomposition (the paper's comparison baseline, Alg. 1/2)
+# ---------------------------------------------------------------------------
+
+
+def expand_1d_words(n: int, p: int, n_levels: int) -> float:
+    """Exact wire volume of our allgather-based 1D implementation: each
+    level moves one dense n-bit frontier bitmap, every chunk replicated
+    to the other p-1 processors -> (p-1) * n/64 global 64-bit words per
+    level.  This is the closed form the 1D ``wire_expand`` counter must
+    reproduce (there is no fold/transpose/rotate wire in 1D)."""
+    return float(n_levels) * (p - 1) * n / 64.0
+
+
+def topdown_1d_words(m: int, p: int) -> float:
+    """Classic sparse 1D top-down volume (Buluc & Madduri): every
+    cross-processor edge endpoint is shipped once as a vertex id, and a
+    random partition leaves a (p-1)/p fraction of the 2m directed
+    endpoints remote."""
+    return 2.0 * m * (p - 1) / p
+
+
 @dataclass(frozen=True)
 class AlphaBeta:
     """Machine terms for the latency/bandwidth model. Defaults are TPU v5e

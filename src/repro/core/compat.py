@@ -1,0 +1,40 @@
+"""Version shims for jax APIs that moved between releases.
+
+``shard_map`` is the load-bearing one: newer jax exposes
+``jax.shard_map(..., check_vma=...)`` while the pinned 0.4.x series only
+has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.  Every
+shard_map call in this repo goes through :func:`shard_map` below so the
+whole distributed layer runs on either API.
+
+The ``check_vma`` kwarg (varying-manual-axes checking) is the renamed
+successor of ``check_rep`` (replication checking); both switch the same
+static verifier off, which this codebase needs because pallas_call
+outputs carry no replication/vma annotation.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export with the check_vma spelling
+    _shard_map_new = jax.shard_map
+except AttributeError:
+    _shard_map_new = None
+
+try:  # jax 0.4.x fallback: experimental module with check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+except ImportError:  # pragma: no cover - one of the two always exists
+    _shard_map_old = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Portable shard_map: translate ``check_vma`` to whatever the
+    installed jax understands (dropped entirely when left as None)."""
+    if _shard_map_new is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+    if _shard_map_old is None:  # pragma: no cover
+        raise ImportError("no shard_map implementation in this jax")
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

@@ -1,4 +1,19 @@
-"""2D (pr x pc) vertex/edge partition — the paper's Eq. (1) checkerboard.
+"""Vertex/edge partitions behind one API: 1D row blocks and the paper's
+2D (pr x pc) Eq. (1) checkerboard.
+
+Both partition classes share the duck-typed surface the drivers rely on
+(``n``, ``n_orig``, ``p``, ``chunk``, ``decomposition``, ``vec_to_blocks``
+/ ``blocks_to_vec``); ``make_partition_1d`` / ``make_partition`` are the
+two constructors, and ``repro.core.bfs`` dispatches on the config's
+``decomposition`` field ("1d" | "2d").
+
+1D (Buluc & Madduri's baseline, the paper's comparison axis): processor i
+owns the vertex chunk V_i = [i*chunk, (i+1)*chunk) and the adjacency
+*row* strip T[V_i, :] (T[v, u] = 1 iff edge u->v) — all edges pointing
+into its vertices.  There is only one vector layout, so the expand step
+is a single allgather of the frontier along the one mesh axis and both
+the fold and transpose phases of the 2D algorithm vanish (at the price
+of the O(n)-per-processor frontier storage the paper's Eq. 2 charges).
 
 Vertex-vector layouts (the paper's distributed-vector conventions):
 
@@ -24,11 +39,51 @@ import numpy as np
 
 
 @dataclass(frozen=True)
+class Partition1D:
+    """1D row decomposition over ``p`` processors (single mesh axis)."""
+    n: int        # padded vertex count
+    n_orig: int   # original vertex count
+    p: int
+
+    @property
+    def decomposition(self) -> str:
+        return "1d"
+
+    @property
+    def chunk(self) -> int:      # owned vertices per processor (= nr)
+        return self.n // self.p
+
+    @property
+    def nr(self) -> int:         # rows per block strip
+        return self.chunk
+
+    @property
+    def nc(self) -> int:         # cols per block strip = all of them
+        return self.n
+
+    # ---- layout maps (host-side helpers; device code uses axis_index) ----
+
+    def owner(self, v: np.ndarray):
+        return v // self.chunk, v % self.chunk
+
+    def vec_to_blocks(self, x: np.ndarray) -> np.ndarray:
+        """(n,) -> (p, chunk)."""
+        return x.reshape(self.p, self.chunk)
+
+    def blocks_to_vec(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(x).reshape(self.n)[: self.n_orig]
+
+
+@dataclass(frozen=True)
 class Partition2D:
     n: int        # padded vertex count
     n_orig: int   # original vertex count
     pr: int
     pc: int
+
+    @property
+    def decomposition(self) -> str:
+        return "2d"
 
     @property
     def p(self) -> int:
@@ -81,3 +136,15 @@ def make_partition(n_orig: int, pr: int, pc: int, align: int = 128) -> Partition
     quantum = p * align
     n = ((max(n_orig, 1) + quantum - 1) // quantum) * quantum
     return Partition2D(n=n, n_orig=n_orig, pr=pr, pc=pc)
+
+
+def make_partition_1d(n_orig: int, p: int, align: int = 128) -> Partition1D:
+    """1D counterpart of :func:`make_partition` with identical padding
+    rules, so a (p,) 1D and a (pr, pc) 2D partition of the same graph
+    with pr*pc == p agree on the padded ``n`` (depth arrays comparable
+    element-for-element)."""
+    if align % 32:
+        raise ValueError("align must be a multiple of 32 (bitmap words)")
+    quantum = p * align
+    n = ((max(n_orig, 1) + quantum - 1) // quantum) * quantum
+    return Partition1D(n=n, n_orig=n_orig, p=p)

@@ -86,6 +86,21 @@ def bfs_depths(n: int, src: np.ndarray, dst: np.ndarray, root: int) -> np.ndarra
     return depth
 
 
+def depths_from_parents(n: int, parent: np.ndarray, root: int) -> np.ndarray:
+    """Derive depths by iterating parent chains.  Parent choice in BFS is
+    nondeterministic but depths are unique, so this is the comparison key
+    for cross-implementation (e.g. 1D vs 2D) equality checks."""
+    parent = np.asarray(parent, dtype=np.int64)
+    depth = np.full(n, -1, np.int64)
+    depth[root] = 0
+    for _ in range(n):
+        upd = (depth == -1) & (parent >= 0) & (depth[parent] >= 0)
+        if not upd.any():
+            break
+        depth[upd] = depth[parent[upd]] + 1
+    return depth
+
+
 def validate_parents(n: int, src: np.ndarray, dst: np.ndarray, root: int,
                      parent: np.ndarray) -> Tuple[bool, str]:
     """BFS-tree validity: (1) root self-parent, (2) every tree edge exists,

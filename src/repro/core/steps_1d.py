@@ -1,0 +1,123 @@
+"""Per-level BFS steps for the 1D row decomposition (the paper's Alg. 1/2
+distributed baseline, Buluc & Madduri): shard_map bodies over ONE mesh
+axis of size p.
+
+Schedule per level:
+
+  expand : pack the owned frontier chunk into a bitmap and allgather it
+           along the single axis -> every processor holds the full
+           n-vertex frontier.  This replaces BOTH the 2D transpose and
+           fold phases (there is no second axis to exchange along), so
+           the entire wire volume of a 1D level is the allgather.
+  local  : top-down — edge-parallel SpMSV over the strip T[V_i, :]
+           (select-source, min semiring); bottom-up — in-neighbor scan
+           of unvisited owned rows.  Discovered children are *always
+           locally owned* (the strip holds every edge into V_i), so the
+           parent update is local and fold-free.
+
+Counters share COUNTER_KEYS with the 2D steps (core/steps.py) so the
+driver, benchmarks, and Eq. 2 comparisons treat both decompositions
+uniformly; 1D leaves wire_transpose / wire_fold / wire_rotate /
+wire_updates at zero by construction.  wire_expand per level is
+(p-1) * n/64 global 64-bit words (dense bitmap, every chunk replicated
+to the other p-1 processors) — the closed form in
+``core.comm_model.expand_1d_words``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.frontier import INT_INF, pack_bits, unpack_bits
+from repro.core.steps import zero_counters
+
+
+class LevelArgs1D(NamedTuple):
+    """Static/per-search context threaded into 1D level steps.  Local
+    discovery is always the dense edge-parallel path (make_bfs_fn_1d
+    rejects other modes), so there is no local_mode switch here."""
+    part: "object"            # Partition1D (static)
+    axis: str                 # the single mesh axis name
+    use_edge_dst: bool = False  # bottom-up: read per-edge rows (no search)
+
+
+def expand_frontier_1d(front: jax.Array, axis: str):
+    """Allgather the packed frontier chunk along the single axis.
+
+    Returns (f_words uint32[n//32], ctr-updates dict with the global
+    wire/use expand words in paper 64-bit units)."""
+    words = pack_bits(front)                         # (chunk//32,) u32
+    gathered = lax.all_gather(words, axis, tiled=True)
+    p = lax.psum(1, axis)   # static axis size (lax.axis_size needs newer jax)
+    # each of the p chunks is replicated to the other p-1 processors;
+    # u32 word = half a 64-bit paper word
+    wire = jnp.float32(words.size) * 0.5 * (p - 1) * p
+    return gathered, wire
+
+
+def topdown_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
+                     front: jax.Array, args: LevelArgs1D
+                     ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One 1D top-down level. g holds the strip arrays (squeezed)."""
+    part = args.part
+    ctr = zero_counters()
+
+    # --- Expand: allgather the frontier bitmap along the axis ------------
+    f_words, wire = expand_frontier_1d(front, args.axis)
+    f_all = unpack_bits(f_words)                     # (n,) bool
+    ctr["wire_expand"] = wire
+    n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
+    ctr["use_expand"] = n_f * (part.p - 1)           # sparse-id equivalent
+
+    # --- Local discovery: SpMSV over the strip (global source ids) ------
+    from repro.kernels.spmsv.ref import spmsv_dense
+    cand = spmsv_dense(g["edge_src"], g["row_idx"], g["nnz"], f_all,
+                       part.chunk, jnp.int32(0))
+    e_mask = jnp.arange(g["edge_src"].shape[0]) < g["nnz"]
+    ctr["edges_examined"] = lax.psum(
+        jnp.sum(e_mask, dtype=jnp.float32), args.axis)
+    ctr["edges_useful"] = lax.psum(
+        jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
+        args.axis)
+
+    # --- Local update (children are owned; no fold) ----------------------
+    newly = (pi == -1) & (cand != INT_INF)
+    pi = jnp.where(newly, cand, pi)
+    return pi, newly, ctr
+
+
+def bottomup_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
+                      front: jax.Array, args: LevelArgs1D
+                      ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One 1D bottom-up level: after the same frontier allgather, each
+    processor scans its *unvisited* owned rows for an in-neighbor in the
+    frontier — one sub-step, no rotation (the strip already holds every
+    potential parent edge)."""
+    part = args.part
+    ctr = zero_counters()
+
+    f_words, wire = expand_frontier_1d(front, args.axis)
+    ctr["wire_expand"] = wire
+    ctr["use_expand"] = jnp.float32(part.n / 64.0) * (part.p - 1)
+
+    from repro.kernels.bottomup.ref import bottomup_substep
+    cvec = (pi != -1).astype(jnp.int32)
+    ve = g["edge_dst"] if args.use_edge_dst else None
+    seg_par = bottomup_substep(g["row_ptr"], g["col_idx"], f_words, cvec,
+                               jnp.int32(0), g["nnz"], ve_win=ve)
+    newly = (pi == -1) & (seg_par != INT_INF)
+    pi = jnp.where(newly, seg_par, pi)
+
+    row_lens = (g["row_ptr"][1:] - g["row_ptr"][:-1]).astype(jnp.float32)
+    edges_use = lax.psum(
+        jnp.sum(jnp.where(cvec == 0, row_lens, 0.0)), args.axis)
+    ctr["edges_examined"] = edges_use
+    ctr["edges_useful"] = edges_use
+    # parent updates are local in 1D: use_updates counts discoveries for
+    # Eq. 2 comparability, wire_updates stays 0
+    ctr["use_updates"] = 2.0 * lax.psum(
+        jnp.sum(newly, dtype=jnp.float32), args.axis)
+    return pi, newly, ctr

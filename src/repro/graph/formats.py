@@ -24,7 +24,8 @@ from typing import Any, Dict
 
 import numpy as np
 
-from repro.core.partition import Partition2D, make_partition
+from repro.core.partition import (Partition1D, Partition2D, make_partition,
+                                  make_partition_1d)
 from repro.graph.rmat import EdgeList
 
 
@@ -83,6 +84,100 @@ class BlockedGraph:
             raise ValueError(mode)
         return {"index_i32": idx, "pointer_i32": int(ptr),
                 "total_i32": idx + int(ptr)}
+
+
+@dataclass
+class Blocked1DGraph:
+    """1D row-strip storage: processor i holds T[V_i, :] (all edges into
+    its owned vertices), in both orientations.
+
+    Unlike the 2D format, source-column indices are *global* ids (the
+    strip spans every column), so the top-down SpMSV and bottom-up scan
+    run with ``col_offset = 0`` against the full allgathered frontier.
+    No per-column pointer array is stored: the 1D top-down path is
+    edge-parallel (the O(n) aggregate col_ptr per processor is exactly
+    the storage blow-up the paper's §5.1 charges against 1D CSR).
+    """
+    part: Partition1D
+    m_input: int
+    m: int
+    # --- top-down orientation (edges sorted by source col u) ---
+    edge_src: np.ndarray  # (p, cap) i32 GLOBAL source u
+    row_idx: np.ndarray   # (p, cap) i32 local dest v
+    # --- bottom-up orientation (CSR by dest row v) ---
+    row_ptr: np.ndarray   # (p, chunk+1) i32
+    col_idx: np.ndarray   # (p, cap) i32 GLOBAL source u, CSR order
+    edge_dst: np.ndarray  # (p, cap) i32 local dest v, CSR order
+    # --- per-block / per-vertex metadata ---
+    nnz: np.ndarray       # (p,) i32
+    deg_A: np.ndarray     # (p, chunk) i32 out-degree of owned vertices
+    cap: int
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        out = {}
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                out[f.name] = v
+        return out
+
+    def storage_words(self) -> Dict[str, int]:
+        """i32 accounting mirroring BlockedGraph.storage_words: index
+        arrays in both orientations + the CSR row pointers."""
+        idx = 2 * self.cap * self.part.p
+        ptr = (self.part.chunk + 1) * self.part.p
+        return {"index_i32": idx, "pointer_i32": ptr,
+                "total_i32": idx + ptr}
+
+
+def build_blocked_1d(edges: EdgeList, p: int, align: int = 128,
+                     cap_pad: int = 128) -> Blocked1DGraph:
+    """Partition edges u->v by owner of the *destination* v into p row
+    strips; pad every strip to a common static capacity."""
+    part = make_partition_1d(edges.n, p, align)
+    chunk = part.chunk
+    u, v = edges.src.astype(np.int64), edges.dst.astype(np.int64)
+    blk = v // chunk
+    v_loc = v - blk * chunk
+
+    nnz = np.bincount(blk, minlength=p).astype(np.int64)
+    cap = _round_up(max(int(nnz.max()), 1), cap_pad)
+
+    def _orient(primary, secondary):
+        """Sort by (block, primary, secondary), return padded per-block
+        (primary, secondary) arrays."""
+        order = np.lexsort((secondary, primary, blk))
+        pb, pp, ps = blk[order], primary[order], secondary[order]
+        pri = np.zeros((p, cap), dtype=np.int64)
+        sec = np.zeros((p, cap), dtype=np.int64)
+        starts = np.concatenate([[0], np.cumsum(nnz)])
+        for b in range(p):
+            k = int(nnz[b])
+            pri[b, :k] = pp[starts[b]:starts[b] + k]
+            sec[b, :k] = ps[starts[b]:starts[b] + k]
+        return pri, sec
+
+    # top-down orientation: sorted by global source u
+    edge_src, row_idx = _orient(u, v_loc)
+    # bottom-up orientation: CSR by local dest row v
+    edge_dst_, col_idx_ = _orient(v_loc, u)
+    row_ptr = np.zeros((p, chunk + 1), dtype=np.int64)
+    flat = blk * np.int64(chunk) + v_loc
+    cnt = np.bincount(flat, minlength=p * chunk).reshape(p, chunk)
+    row_ptr[:, 1:] = np.cumsum(cnt, axis=1)
+
+    deg = np.bincount(u, minlength=part.n).astype(np.int64)
+
+    def _i32(x):
+        return np.ascontiguousarray(x.astype(np.int32))
+
+    return Blocked1DGraph(
+        part=part, m_input=edges.m_input, m=edges.m,
+        edge_src=_i32(edge_src), row_idx=_i32(row_idx),
+        row_ptr=_i32(row_ptr), col_idx=_i32(col_idx_),
+        edge_dst=_i32(edge_dst_),
+        nnz=_i32(nnz), deg_A=_i32(deg.reshape(p, chunk)), cap=cap,
+    )
 
 
 def build_blocked(edges: EdgeList, pr: int, pc: int, align: int = 128,

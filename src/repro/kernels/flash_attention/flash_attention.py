@@ -34,8 +34,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
 
     def body(j, state):
         m, l, acc = state
-        kj = pl.load(k_ref, (0, pl.ds(j * bk, bk), slice(None)))
-        vj = pl.load(v_ref, (0, pl.ds(j * bk, bk), slice(None)))
+        # index the leading block dim with a size-1 slice, not a literal
+        # int: jax 0.4.x's interpret-mode load discharge only accepts
+        # Slice/array indices.
+        kj = pl.load(k_ref, (pl.ds(0, 1), pl.ds(j * bk, bk), slice(None)))[0]
+        vj = pl.load(v_ref, (pl.ds(0, 1), pl.ds(j * bk, bk), slice(None)))[0]
         s = q @ kj.astype(jnp.float32).T               # (BQ, BK)
         kpos = j * bk + jnp.arange(bk, dtype=jnp.int32)
         mask = kpos[None, :] < sk

@@ -26,6 +26,7 @@ from repro.configs.base import (BFSConfig, BFSShape, GNNConfig, GNNShape,
                                 LMConfig, LMShape, RecsysConfig, RecsysShape,
                                 get_config)
 from repro.core import steps as bfs_steps
+from repro.core.compat import shard_map
 from repro.core.bfs import make_bfs_fn, _DENSE_KEYS
 from repro.core.partition import make_partition
 from repro.graph.sampler import khop_sample
@@ -423,7 +424,7 @@ def build_bfs_cell(cfg: BFSConfig, shape: BFSShape, mesh,
             return pi2[None, None], f2[None, None]
 
         spec = P("data", "model")
-        mapped = jax.shard_map(
+        mapped = shard_map(
             level_fn, mesh=mesh,
             in_specs=({k: spec for k in keys}, spec, spec),
             out_specs=(spec, spec), check_vma=False)

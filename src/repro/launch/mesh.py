@@ -41,3 +41,13 @@ def make_local_mesh(pr: int = 1, pc: int = 1):
         raise ValueError(f"grid {pr}x{pc} needs {pr*pc} devices, have {n}")
     devs = np.asarray(jax.devices()[: pr * pc]).reshape(pr, pc)
     return jax.sharding.Mesh(devs, (ROW_AXIS, COL_AXIS))
+
+
+def make_local_mesh_1d(p: int = 1):
+    """Single-axis mesh for the 1D row decomposition (axis name ROW_AXIS,
+    matching the default ``row_axis`` the BFS driver shards over)."""
+    n = len(jax.devices())
+    if p > n:
+        raise ValueError(f"1d grid needs {p} devices, have {n}")
+    devs = np.asarray(jax.devices()[:p])
+    return jax.sharding.Mesh(devs, (ROW_AXIS,))

@@ -23,6 +23,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import RecsysConfig
+from repro.core.compat import shard_map
 from repro.models.common import ShardCtx
 
 
@@ -66,7 +67,7 @@ def lookup(table: jnp.ndarray, rows: jnp.ndarray, ctx: ShardCtx):
     flat = rows.reshape(-1)
     dp_total = int(np.prod([ctx.mesh.shape[a] for a in dpa])) if dpa else 1
     rspec = P(dpa) if (dpa and flat.shape[0] % dp_total == 0) else P(None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P("model", None), rspec),
         out_specs=P(*rspec, None), check_vma=False,

@@ -15,10 +15,10 @@ import numpy as np  # noqa: E402
 
 from repro.configs.base import BFSConfig  # noqa: E402
 from repro.core.bfs import run_bfs  # noqa: E402
-from repro.core.ref import validate_parents  # noqa: E402
-from repro.graph.formats import build_blocked  # noqa: E402
+from repro.core.ref import depths_from_parents, validate_parents  # noqa: E402
+from repro.graph.formats import build_blocked, build_blocked_1d  # noqa: E402
 from repro.graph.rmat import rmat_graph  # noqa: E402
-from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.launch.mesh import make_local_mesh, make_local_mesh_1d  # noqa: E402
 
 
 def check(edges, pr, pc, cfg, local_mode="dense", roots=(5,)):
@@ -85,6 +85,40 @@ def main():
             check(edges, 4, 4, cfg, roots=(3, 500))
             check(edges, 2, 8, cfg, roots=(3,))
         print("OK optimized")
+    elif mode == "oned":
+        # the tentpole acceptance case: on >=3 R-MAT scales under a
+        # 16-strip mesh, the 1D decomposition must (a) produce valid
+        # trees, (b) match the 2D depths exactly, and (c) report
+        # wire_expand equal to the comm_model closed form (and no
+        # fold/transpose wire at all — those phases don't exist in 1D).
+        from repro.core import comm_model
+        p = n_dev
+        for scale, diro in ((9, True), (10, False), (11, True)):
+            edges = rmat_graph(scale, edge_factor=8, seed=scale)
+            deg = edges.out_degrees()
+            root = int(np.flatnonzero(deg)[0])
+            g1 = build_blocked_1d(edges, p, align=32, cap_pad=32)
+            r1 = run_bfs(g1, root,
+                         BFSConfig(decomposition="1d",
+                                   direction_optimizing=diro),
+                         make_local_mesh_1d(p))
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       root, r1.parents)
+            assert ok, (scale, msg)
+            g2 = build_blocked(edges, 4, 4, align=32, cap_pad=32)
+            r2 = run_bfs(g2, root,
+                         BFSConfig(direction_optimizing=diro),
+                         make_local_mesh(4, 4))
+            d1 = depths_from_parents(edges.n, r1.parents, root)
+            d2 = depths_from_parents(edges.n, r2.parents, root)
+            assert np.array_equal(d1, d2), (scale, int((d1 != d2).sum()))
+            want = comm_model.expand_1d_words(g1.part.n, p, r1.n_levels)
+            got = r1.counters["wire_expand"]
+            assert got > 0 and abs(got - want) <= 1e-5 * want, (got, want)
+            for k in ("wire_transpose", "wire_fold", "wire_rotate",
+                      "wire_updates"):
+                assert r1.counters[k] == 0.0, (k, r1.counters[k])
+        print("OK oned")
     elif mode == "multiroot":
         edges = rmat_graph(10, edge_factor=8, seed=9)
         rng = np.random.default_rng(0)

@@ -1,0 +1,153 @@
+"""1D row-decomposition BFS: oracle parity, partition/format invariants,
+dispatch errors, and the 16-device subprocess acceptance case."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import BFSConfig, get_config
+from repro.core import comm_model
+from repro.core.bfs import run_bfs
+from repro.core.partition import make_partition, make_partition_1d
+from repro.core.ref import bfs_depths, depths_from_parents, validate_parents
+from repro.graph.formats import build_blocked, build_blocked_1d
+from repro.graph.rmat import preprocess, rmat_graph
+from repro.launch.mesh import make_local_mesh_1d
+
+_HERE = os.path.dirname(__file__)
+
+
+# ---------------------------------------------------------------------------
+# Partition + format invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 5000), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_partition_1d_layout(n, p):
+    part = make_partition_1d(n, p, align=32)
+    assert part.n % (part.p * 32) == 0
+    assert part.chunk * part.p == part.n
+    assert part.decomposition == "1d"
+    v = np.arange(part.n)
+    i, off = part.owner(v)
+    assert np.array_equal(i * part.chunk + off, v)
+    blocks = part.vec_to_blocks(v)
+    assert blocks.shape == (p, part.chunk)
+    assert np.array_equal(part.blocks_to_vec(blocks), v[:n])
+
+
+@given(st.integers(1, 2000), st.integers(1, 6), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_partition_1d_2d_padding_agrees(n, pr, pc):
+    """The unified-API contract: 1D over p=pr*pc and 2D over (pr, pc) pad
+    to the same n, so depth arrays are comparable element-for-element."""
+    p1 = make_partition_1d(n, pr * pc, align=32)
+    p2 = make_partition(n, pr, pc, align=32)
+    assert p1.n == p2.n and p1.chunk == p2.chunk
+
+
+@pytest.mark.parametrize("p", [1, 2, 4])
+def test_blocked_1d_roundtrip(p):
+    e = rmat_graph(9, edge_factor=8, seed=4)
+    g = build_blocked_1d(e, p, align=32, cap_pad=32)
+    part = g.part
+    got = set()
+    for i in range(p):
+        k = int(g.nnz[i])
+        # top-down orientation: global source, local dest
+        for t in range(k):
+            got.add((int(g.edge_src[i, t]),
+                     int(g.row_idx[i, t]) + i * part.chunk))
+        # CSR orientation covers the same edges with consistent pointers
+        assert g.row_ptr[i, -1] == k
+        rows = np.repeat(np.arange(part.chunk),
+                         np.diff(g.row_ptr[i]).astype(np.int64))
+        assert np.array_equal(rows, g.edge_dst[i, :k])
+        csr_edges = set(zip(g.col_idx[i, :k].tolist(),
+                            (rows + i * part.chunk).tolist()))
+        assert csr_edges == {(u, v) for u, v in got
+                             if i * part.chunk <= v < (i + 1) * part.chunk}
+    assert got == set(zip(e.src.tolist(), e.dst.tolist()))
+    # out-degrees concatenate to the global degree vector
+    deg = np.bincount(e.src, minlength=part.n)
+    assert np.array_equal(g.deg_A.reshape(-1), deg)
+
+
+# ---------------------------------------------------------------------------
+# Oracle parity (single device, property-based)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_bfs_1d_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 60))
+    m = int(rng.integers(1, 4 * n))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    e = preprocess(src, dst, n, symmetrize=True)
+    if e.m == 0:
+        return
+    root = int(e.src[0])
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    cfg = BFSConfig(decomposition="1d",
+                    direction_optimizing=bool(rng.integers(0, 2)))
+    res = run_bfs(g, root, cfg, make_local_mesh_1d(1))
+    ok, msg = validate_parents(n, e.src, e.dst, root, res.parents)
+    assert ok, msg
+    d = bfs_depths(n, e.src, e.dst, root)
+    assert np.array_equal(depths_from_parents(n, res.parents, root), d)
+
+
+def test_bfs_1d_registered_configs():
+    cfg = get_config("bfs-rmat-1d")
+    assert cfg.decomposition == "1d" and cfg.direction_optimizing
+    e = rmat_graph(8, edge_factor=8, seed=1)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    root = int(e.src[0])
+    res = run_bfs(g, root, cfg, make_local_mesh_1d(1))
+    ok, msg = validate_parents(e.n, e.src, e.dst, root, res.parents)
+    assert ok, msg
+    assert res.counters["edges_examined"] > 0
+
+
+def test_dispatch_rejects_mismatched_graph():
+    e = rmat_graph(8, edge_factor=8, seed=1)
+    g1 = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    g2 = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    mesh = make_local_mesh_1d(1)
+    with pytest.raises(TypeError):
+        run_bfs(g2, 0, BFSConfig(decomposition="1d"), mesh)
+    with pytest.raises(TypeError):
+        run_bfs(g1, 0, BFSConfig(), mesh)
+
+
+def test_comm_model_1d_forms():
+    # p=1 moves nothing; volume grows linearly in levels and ~p
+    assert comm_model.expand_1d_words(1 << 20, 1, 5) == 0.0
+    assert (comm_model.expand_1d_words(1 << 20, 16, 10)
+            == 2 * comm_model.expand_1d_words(1 << 20, 16, 5))
+    assert comm_model.topdown_1d_words(1000, 1) == 0.0
+    assert comm_model.topdown_1d_words(1000, 16) == 2.0 * 1000 * 15 / 16
+
+
+# ---------------------------------------------------------------------------
+# Multi-device acceptance case (subprocess, 16 forced host devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_distributed_bfs_1d_matches_2d():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    main = os.path.join(_HERE, "_dist_bfs_main.py")
+    r = subprocess.run([sys.executable, main, "16", "oned"],
+                       capture_output=True, text=True, timeout=1200,
+                       env=env)
+    assert r.returncode == 0, f"oned failed:\n{r.stdout}\n{r.stderr}"
+    assert "OK oned" in r.stdout

@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # 16-device subprocess cases, >60s each
+
 _HERE = os.path.dirname(__file__)
 _MAIN = os.path.join(_HERE, "_dist_bfs_main.py")
 

@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # each case compiles + runs a full driver
+
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 _ENV = {**os.environ, "PYTHONPATH": os.path.join(_ROOT, "src")}
 _ENV.pop("XLA_FLAGS", None)

@@ -5,6 +5,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # multi-device subprocess cases, >60s each
+
 _HERE = os.path.dirname(__file__)
 _MAIN = os.path.join(_HERE, "_dist_nn_main.py")
 

@@ -5,20 +5,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ref import (bfs_bottomup, bfs_depths, bfs_topdown,
-                            validate_parents)
+                            depths_from_parents, validate_parents)
 from repro.graph.rmat import preprocess, rmat_graph
-
-
-def _depths_from_parents(n, parent, root):
-    depth = np.full(n, -1, np.int64)
-    depth[root] = 0
-    # iterate: child depth = parent depth + 1 (tree has <= n levels)
-    for _ in range(n):
-        upd = (depth == -1) & (parent >= 0) & (depth[parent] >= 0)
-        if not upd.any():
-            break
-        depth[upd] = depth[parent[upd]] + 1
-    return depth
 
 
 @given(st.integers(0, 10_000))
@@ -41,7 +29,7 @@ def test_topdown_equals_bottomup(seed):
     for p in (p_td, p_bu):
         ok, msg = validate_parents(n, e.src, e.dst, root, p)
         assert ok, msg
-        assert np.array_equal(_depths_from_parents(n, p, root), d)
+        assert np.array_equal(depths_from_parents(n, p, root), d)
 
 
 def test_rmat_shape_and_skew():
