@@ -57,3 +57,61 @@ def sweep_decompositions(scale: int, grid, n_devices: int = 16,
              res["hmean_s"] * 1e6, f"teps={res['teps']:.3e};{phases}")
         out.append(res)
     return out
+
+
+def sweep_local_formats(scale: int, grid, n_devices: int = 16,
+                        roots: int = 2, local_mode: str = "kernel",
+                        out_json: Optional[str] = None,
+                        **payload_kw) -> List[Dict]:
+    """The paper's Fig. 6 grid on identical R-MAT graphs: local pointer
+    storage (CSR vs DCSC) crossed with the decomposition (1D strips vs
+    2D blocks), one CSV row per combo with traversal time, TEPS, and the
+    §5.1 storage-word accounting.  The 1D/CSR cell is the O(n*p)
+    col_ptr blow-up the paper charges against 1D; 1D/DCSC is the strip
+    compression that answers it (graph/formats.py).  ``out_json`` dumps
+    the rows as a machine-readable artifact (CI bench smoke)."""
+    rows = []
+    for decomp in ("1d", "2d"):
+        for storage in ("csr", "dcsc"):
+            res = run_worker({"scale": scale, "grid": list(grid),
+                              "roots": roots, "decomposition": decomp,
+                              "storage": storage, "local_mode": local_mode,
+                              **payload_kw}, n_devices=n_devices)
+            mem = res[f"mem_{storage}"]
+            emit(f"bfs_fmt_s{scale}_{decomp}_{storage}_{local_mode}",
+                 res["hmean_s"] * 1e6,
+                 f"teps={res['teps']:.3e};pointer_i32={mem['pointer_i32']};"
+                 f"total_i32={mem['total_i32']}")
+            rows.append({"scale": scale, "grid": list(grid),
+                         "decomposition": decomp, "storage": storage,
+                         "local_mode": local_mode,
+                         "us_per_call": res["hmean_s"] * 1e6,
+                         "teps": res["teps"], "storage_words": mem,
+                         "counters": res["counters"]})
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=2)
+    return rows
+
+
+def _main():
+    """CLI for the CI bench smoke: tiny-scale sweep_local_formats on
+    forced host devices, CSV to stdout + JSON artifact."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8)
+    ap.add_argument("--grid", default="2x2")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--roots", type=int, default=2)
+    ap.add_argument("--local-mode", default="kernel")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    pr, pc = map(int, a.grid.split("x"))
+    print("name,us_per_call,derived")
+    sweep_local_formats(a.scale, (pr, pc), n_devices=a.devices,
+                        roots=a.roots, local_mode=a.local_mode,
+                        out_json=a.out, validate=True)
+
+
+if __name__ == "__main__":
+    _main()

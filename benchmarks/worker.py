@@ -34,18 +34,26 @@ def main():
     # build once, time many (excludes compile); a 1d run reuses the same
     # grid spec as p = pr*pc strips so sweeps pair up on identical graphs
     from jax.sharding import NamedSharding, PartitionSpec as P
+    local_mode = payload.get("local_mode", "dense")
     if decomp == "1d":
-        g = build_blocked_1d(edges, pr * pc, align=32, cap_pad=32)
+        # the uncompressed strip col_ptr is only materialized for the
+        # kernel/csr comparison cell (O(n*p) host words by design)
+        need_col_ptr = (local_mode == "kernel"
+                        and cfg.storage == "csr")
+        g = build_blocked_1d(edges, pr * pc, align=32, cap_pad=32,
+                             with_col_ptr=need_col_ptr)
         mesh = make_local_mesh_1d(pr * pc)
         part = g.part
-        fn, keys = make_bfs_fn(mesh, part, cfg)
+        fn, keys = make_bfs_fn(mesh, part, cfg, local_mode=local_mode,
+                               maxdeg=g.maxdeg_col,
+                               cap_f=payload.get("cap_f", 0))
         sh = NamedSharding(mesh, P("data"))
     else:
         g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
         mesh = make_local_mesh(pr, pc)
         part = g.part
         fn, keys = make_bfs_fn(mesh, part, cfg, g.cap_seg,
-                               maxdeg=g.maxdeg_col)
+                               local_mode=local_mode, maxdeg=g.maxdeg_col)
         sh = NamedSharding(mesh, P("data", "model"))
     arrs = g.device_arrays()
     gdev = {k: jax.device_put(np.asarray(arrs[k]), sh) for k in keys}
@@ -63,11 +71,9 @@ def main():
                 np.asarray(pi).reshape(part.n)[: part.n_orig])
             assert ok, msg
     hmean = len(times) / sum(1.0 / t for t in times)
-    if decomp == "1d":
-        mem = {"mem_1d": g.storage_words()}
-    else:
-        mem = {"mem_csr": g.storage_words("csr"),
-               "mem_dcsc": g.storage_words("dcsc")}
+    # both graph formats share the storage_words(mode) accounting API
+    mem = {"mem_csr": g.storage_words("csr"),
+           "mem_dcsc": g.storage_words("dcsc")}
     print(json.dumps({
         "hmean_s": hmean, "times": times, "m_input": edges.m_input,
         "m": edges.m, "n": edges.n, "counters": counters,

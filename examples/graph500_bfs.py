@@ -11,6 +11,11 @@ Multi-device grids need forced host devices, e.g.:
 ``--decomposition 1d`` runs the paper's 1D row-strip baseline on
 p = pr*pc strips of the same graph (the Eq. 2 comparison axis):
     ... examples/graph500_bfs.py --grid 4x4 --decomposition 1d
+
+``--local-mode kernel --storage dcsc`` selects the Pallas local-
+discovery path with compressed pointers in either decomposition (1D =
+the strip-DCSC kernel; the §5.1 CSR/DCSC axis of Fig. 6):
+    ... --decomposition 1d --local-mode kernel --storage dcsc
 """
 import argparse
 import time
@@ -34,17 +39,23 @@ def main():
     ap.add_argument("--roots", type=int, default=16)
     ap.add_argument("--no-diropt", action="store_true")
     ap.add_argument("--decomposition", choices=("1d", "2d"), default="2d")
+    ap.add_argument("--local-mode", choices=("dense", "kernel"),
+                    default="dense")
+    ap.add_argument("--storage", choices=("csr", "dcsc"), default="csr")
     args = ap.parse_args()
     pr, pc = map(int, args.grid.split("x"))
 
     edges = rmat_graph(args.scale, 16, seed=1)
     if args.decomposition == "1d":
-        graph = build_blocked_1d(edges, pr * pc, align=32)
+        graph = build_blocked_1d(
+            edges, pr * pc, align=32,
+            with_col_ptr=(args.local_mode == "kernel"
+                          and args.storage == "csr"))
         mesh = make_local_mesh_1d(pr * pc)
     else:
         graph = build_blocked(edges, pr, pc, align=32)
         mesh = make_local_mesh(pr, pc)
-    cfg = BFSConfig(decomposition=args.decomposition,
+    cfg = BFSConfig(decomposition=args.decomposition, storage=args.storage,
                     direction_optimizing=not args.no_diropt)
     rng = np.random.default_rng(0)
 
@@ -52,7 +63,7 @@ def main():
     for i in range(args.roots):
         root = random_source(edges, rng)
         t0 = time.perf_counter()
-        res = run_bfs(graph, root, cfg, mesh)
+        res = run_bfs(graph, root, cfg, mesh, local_mode=args.local_mode)
         dt = time.perf_counter() - t0
         ok, msg = validate_parents(edges.n, edges.src, edges.dst, root,
                                    res.parents)

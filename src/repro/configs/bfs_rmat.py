@@ -33,3 +33,8 @@ CONFIG_MULTIROOT = register(dataclasses.replace(
 CONFIG_1D = register(BFSConfig(arch="bfs-rmat-1d", decomposition="1d"))
 CONFIG_1D_TOPDOWN = register(dataclasses.replace(
     CONFIG_1D, arch="bfs-rmat-1d-topdown", direction_optimizing=False))
+# 1D with strip-DCSC compressed pointers — the previously missing half
+# of the Fig. 6 CSR/DCSC x 1D/2D grid (run with local_mode="kernel" to
+# take the Pallas strip SpMSV; see core/local_ops.py)
+CONFIG_1D_DCSC = register(dataclasses.replace(
+    CONFIG_1D, arch="bfs-rmat-1d-dcsc", storage="dcsc"))

@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import BFSConfig
 from repro.core import steps
 from repro.core.compat import shard_map
+from repro.core.local_ops import get_local_ops
 from repro.core.partition import Partition1D, Partition2D
 from repro.core.steps import LevelArgs, bottomup_level, topdown_level, zero_counters
 from repro.core.steps_1d import (LevelArgs1D, bottomup_level_1d,
@@ -36,13 +37,9 @@ from repro.graph.formats import Blocked1DGraph, BlockedGraph
 
 MAX_LEVELS = 64
 
-# graph arrays needed per local-discovery mode
-_DENSE_KEYS = ("edge_src", "row_idx", "nnz", "deg_A", "col_idx", "row_ptr",
-               "seg_ptr", "edge_dst")
-_KERNEL_KEYS = ("col_ptr", "row_idx", "jc", "cp", "nzc", "nnz", "deg_A",
-                "col_idx", "row_ptr", "seg_ptr")
-_DENSE_KEYS_1D = ("edge_src", "row_idx", "nnz", "deg_A", "col_idx",
-                  "row_ptr", "edge_dst")
+# Which graph arrays a given (decomposition, local_mode, storage) combo
+# ships is declared by its LocalOps registry entry (core/local_ops.py);
+# the old _DENSE_KEYS/_KERNEL_KEYS tuples live there as entry.keys.
 
 
 @dataclass
@@ -139,23 +136,26 @@ def _bfs_body_1d(g, root, *, part: Partition1D, args: LevelArgs1D,
 
 
 def make_bfs_fn_1d(mesh, part: Partition1D, cfg: BFSConfig,
-                   axis: str = "data", local_mode: str = "dense"):
-    """Build the jitted whole-search 1D BFS function.  Returns
+                   axis: str = "data", local_mode: str = "dense",
+                   maxdeg: int = 0, cap_f: int = 0):
+    """Build the jitted whole-search 1D BFS function.  The LocalOps
+    registry supplies the strip's local-discovery closures and shipping
+    keys for ``(local_mode, cfg.storage)`` — dense edge-parallel,
+    strip-CSR gather, or the strip-DCSC Pallas kernel.  Returns
     fn(graph_arrays_dict, root) -> (pi, level, ctr, stats)."""
-    if local_mode != "dense":
-        raise ValueError(
-            "1d decomposition supports local_mode='dense' only (a per-"
-            "strip col_ptr would be O(n) per processor; see formats.py)")
+    ops = get_local_ops("1d", local_mode, cfg.storage)
     args = LevelArgs1D(part=part, axis=axis,
-                       use_edge_dst=cfg.use_edge_dst)
+                       use_edge_dst=cfg.use_edge_dst,
+                       local_mode=local_mode, storage=cfg.storage,
+                       cap_f=cap_f, maxdeg=maxdeg, ops=ops)
     body = functools.partial(_bfs_body_1d, part=part, args=args, cfg=cfg)
-    gspec = {k: P(axis) for k in _DENSE_KEYS_1D}
+    gspec = {k: P(axis) for k in ops.keys}
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(gspec, P()),
         out_specs=(P(axis), P(), {k: P() for k in steps.COUNTER_KEYS}, P()),
         check_vma=False)
-    return jax.jit(mapped), _DENSE_KEYS_1D
+    return jax.jit(mapped), ops.keys
 
 
 def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
@@ -172,23 +172,24 @@ def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
             raise TypeError(f"decomposition='1d' needs a Partition1D, "
                             f"got {type(part).__name__}")
         return make_bfs_fn_1d(mesh, part, cfg, axis=row_axis,
-                              local_mode=local_mode)
+                              local_mode=local_mode, maxdeg=maxdeg,
+                              cap_f=cap_f)
     if cap_seg <= 0:
         # the bottom-up branch always compiles (lax.cond), and a zero
         # edge window would silently discover nothing
         raise ValueError("2d decomposition needs cap_seg > 0 "
                          "(pass graph.cap_seg)")
+    ops = get_local_ops("2d", local_mode, cfg.storage)
     args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
                      fold_mode=cfg.fold_mode,
                      perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
                      local_mode=local_mode, storage=cfg.storage,
                      cap_f=cap_f, maxdeg=maxdeg,
                      use_edge_dst=cfg.use_edge_dst,
-                     compact_updates=cfg.compact_updates)
-    keys = _KERNEL_KEYS if local_mode == "kernel" else _DENSE_KEYS
+                     compact_updates=cfg.compact_updates, ops=ops)
     body = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
                              n_real_edges=n_real_edges)
-    gspec = {k: P(row_axis, col_axis) for k in keys}
+    gspec = {k: P(row_axis, col_axis) for k in ops.keys}
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(gspec, P()),
@@ -196,25 +197,33 @@ def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
             k: P() for k in steps.COUNTER_KEYS}, P()),
         check_vma=False,   # pallas_call outputs carry no vma annotation
     )
-    return jax.jit(mapped), keys
+    return jax.jit(mapped), ops.keys
 
 
 def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
                           cap_seg: int, n_roots: int,
                           pod_axis: str = "pod", row_axis: str = "data",
-                          col_axis: str = "model", maxdeg: int = 0):
+                          col_axis: str = "model", maxdeg: int = 0,
+                          local_mode: str = "dense", cap_f: int = 0,
+                          n_real_edges: float = 0.0):
     """Batched independent BFS roots sharded over the pod axis — the
     multi-pod Graph500 pattern (16-64 roots per benchmark run, pods are
     embarrassingly parallel across roots; graph blocks replicated across
-    pods, zero inter-pod traffic)."""
+    pods, zero inter-pod traffic).  Routed through the same LocalOps
+    registry as the single-root builders, so ``local_mode``/``cap_f``
+    select the kernel paths here too instead of always shipping the
+    dense key set."""
+    ops = get_local_ops("2d", local_mode, cfg.storage)
     args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
                      fold_mode=cfg.fold_mode,
                      perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
-                     storage=cfg.storage, maxdeg=maxdeg,
+                     local_mode=local_mode, storage=cfg.storage,
+                     cap_f=cap_f, maxdeg=maxdeg,
                      use_edge_dst=cfg.use_edge_dst,
-                     compact_updates=cfg.compact_updates)
+                     compact_updates=cfg.compact_updates, ops=ops)
     body1 = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
-                              n_real_edges=0.0, sync_axis=pod_axis)
+                              n_real_edges=n_real_edges,
+                              sync_axis=pod_axis)
 
     def multi_body(g, roots):
         # roots: (n_roots_local,) — scan full searches over local roots
@@ -224,18 +233,18 @@ def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
         _, (pis, levels) = lax.scan(one, jnp.int32(0), roots.reshape(-1))
         return pis[None, None], levels
 
-    gspec = {k: P(row_axis, col_axis) for k in _DENSE_KEYS}
+    gspec = {k: P(row_axis, col_axis) for k in ops.keys}
     mapped = shard_map(
         multi_body, mesh=mesh,
         in_specs=(gspec, P(pod_axis)),
         out_specs=(P(row_axis, col_axis, pod_axis, None), P(pod_axis)),
         check_vma=False)
-    return jax.jit(mapped), _DENSE_KEYS
+    return jax.jit(mapped), ops.keys
 
 
 def run_bfs(graph, root: int, cfg: BFSConfig, mesh,
             row_axis: str = "data", col_axis: str = "model",
-            local_mode: str = "dense") -> BFSResult:
+            local_mode: str = "dense", cap_f: int = 0) -> BFSResult:
     """End-to-end convenience wrapper: ship blocks, run, validate shapes.
 
     ``graph`` is a BlockedGraph (2D) or Blocked1DGraph (1D); which one
@@ -251,14 +260,21 @@ def run_bfs(graph, root: int, cfg: BFSConfig, mesh,
             f"graph type {type(graph).__name__}")
     if one_d:
         fn, keys = make_bfs_fn(mesh, part, cfg, row_axis=row_axis,
-                               local_mode=local_mode)
+                               local_mode=local_mode,
+                               maxdeg=graph.maxdeg_col, cap_f=cap_f)
         sh = NamedSharding(mesh, P(row_axis))
     else:
         fn, keys = make_bfs_fn(mesh, part, cfg, graph.cap_seg, row_axis,
                                col_axis, local_mode, n_real_edges=graph.m,
-                               maxdeg=graph.maxdeg_col)
+                               maxdeg=graph.maxdeg_col, cap_f=cap_f)
         sh = NamedSharding(mesh, P(row_axis, col_axis))
     arrays = graph.device_arrays()
+    missing = [k for k in keys if k not in arrays]
+    if missing:
+        raise ValueError(
+            f"graph lacks arrays {missing} needed by local_mode="
+            f"{local_mode!r}/storage={cfg.storage!r} (1d csr kernels need "
+            f"build_blocked_1d(..., with_col_ptr=True))")
     gdev = {k: jax.device_put(np.asarray(arrays[k]), sh) for k in keys}
     pi, level, ctr, stats = fn(gdev, jnp.int32(root))
     pi = np.asarray(pi).reshape(part.n)[: part.n_orig]

@@ -48,6 +48,21 @@ def topdown_1d_words(m: int, p: int) -> float:
     return 2.0 * m * (p - 1) / p
 
 
+def strip_csr_pointer_words(n: int, p: int) -> float:
+    """§5.1 storage charge against 1D compressed formats: an uncompressed
+    strip CSC needs n+1 column pointers on EVERY processor — O(n*p)
+    aggregate words, growing with the machine at fixed n."""
+    return float(p) * (n + 1)
+
+
+def strip_dcsc_pointer_words(nzc_total: float, p: int) -> float:
+    """Strip DCSC answer: (jc, cp) pairs over non-empty columns only,
+    2*nzc + 2 words per strip — O(min(n, m)) aggregate, independent of n
+    per processor.  ``nzc_total`` = sum of per-strip non-empty column
+    counts (<= m, and <= the 2*ef*n distinct sources for R-MAT)."""
+    return 2.0 * float(nzc_total) + 2.0 * p
+
+
 @dataclass(frozen=True)
 class AlphaBeta:
     """Machine terms for the latency/bandwidth model. Defaults are TPU v5e

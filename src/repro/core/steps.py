@@ -51,6 +51,17 @@ class LevelArgs(NamedTuple):
     use_edge_dst: bool = False  # bottom-up: read per-edge rows (no search)
     compact_updates: bool = False  # bottom-up: compact (child,parent) sends
     cap_u: int = 0            # compact updates capacity (0 = chunk//8)
+    ops: "object" = None      # LocalOps entry (None = look up from strings)
+
+
+def _resolve_ops(args: "LevelArgs"):
+    """The LocalOps entry for this step config (builders pass it
+    pre-resolved; direct LevelArgs constructions fall back to the
+    registry lookup on the string fields)."""
+    if args.ops is not None:
+        return args.ops
+    from repro.core.local_ops import get_local_ops
+    return get_local_ops("2d", args.local_mode, args.storage)
 
 
 # ---------------------------------------------------------------------------
@@ -159,31 +170,14 @@ def topdown_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
     ctr["use_expand"] = n_f * (pr - 1)               # sparse ids, replicated
 
     # --- Local discovery: SpMSV in the (select-source, min) semiring -----
+    # format-specific work lives behind the LocalOps entry (CSR/DCSC x
+    # dense/kernel); the step only owns the collectives and counters
     j = lax.axis_index(args.col_axis)
     col_offset = (j * nc).astype(jnp.int32)
-    if args.local_mode == "kernel":
-        from repro.kernels.spmsv import ops as spmsv_ops
-        cap_f = args.cap_f or nc
-        ridx = jnp.pad(g["row_idx"], (0, 256))
-        if args.storage == "dcsc":
-            cand = spmsv_ops.spmsv_block_dcsc(
-                g["jc"], g["cp"], g["nzc"], ridx, f_cj, nr, col_offset,
-                cap_f=cap_f, maxdeg=args.maxdeg)
-        else:
-            cand = spmsv_ops.spmsv_block_csr(
-                g["col_ptr"], ridx, f_cj, nr, col_offset,
-                cap_f=cap_f, maxdeg=args.maxdeg)
-        ctr["edges_examined"] = lax.psum(
-            jnp.sum(jnp.where(f_cj, g["col_ptr"][1:] - g["col_ptr"][:-1], 0),
-                    dtype=jnp.float32), (args.row_axis, args.col_axis))
-    else:
-        from repro.kernels.spmsv.ref import spmsv_dense
-        cand = spmsv_dense(g["edge_src"], g["row_idx"], g["nnz"], f_cj, nr,
-                           col_offset)
-        e_mask = jnp.arange(g["edge_src"].shape[0]) < g["nnz"]
-        ctr["edges_examined"] = lax.psum(
-            jnp.sum(e_mask, dtype=jnp.float32),
-            (args.row_axis, args.col_axis))
+    cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_cj, nr,
+                                                col_offset, args)
+    ctr["edges_examined"] = lax.psum(ex_local,
+                                     (args.row_axis, args.col_axis))
     m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
                            dtype=jnp.float32),
                    (args.row_axis, args.col_axis))
@@ -254,6 +248,7 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
 
     col_offset = (j * nc).astype(jnp.int32)
     pure = args.fold_mode.endswith("_pure")
+    ops = _resolve_ops(args)
     for s in range(pc):
         seg_id = (j - s) % pc             # segment V_{i, j-s} this sub-step
         e0 = lax.dynamic_index_in_dim(g["seg_ptr"], seg_id, keepdims=False)
@@ -264,16 +259,10 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
         n_edges = (e1 - e0).astype(jnp.int32)
         cvec = cseg.astype(jnp.int32)
         ve = (lax.dynamic_slice_in_dim(g["edge_dst"], e0, args.cap_seg)
-              - seg_id * chunk) if args.use_edge_dst else None
-        if args.local_mode == "kernel":
-            from repro.kernels.bottomup import ops as bu_ops
-            seg_par = bu_ops.bottomup_substep(
-                rp_seg, jnp.pad(ue, (0, 512)), f_words, cvec, col_offset,
-                n_edges)
-        else:
-            from repro.kernels.bottomup.ref import bottomup_substep
-            seg_par = bottomup_substep(rp_seg, ue, f_words, cvec, col_offset,
-                                       n_edges, ve_win=ve)
+              - seg_id * chunk) if args.use_edge_dst and "edge_dst" in g \
+            else None
+        seg_par = ops.bottomup(rp_seg, ue, f_words, cvec, col_offset,
+                               n_edges, ve)
         found = seg_par != INT_INF
         cseg = cseg | found
         row_lens = (rp_seg[1:] - rp_seg[:-1]).astype(jnp.float32)

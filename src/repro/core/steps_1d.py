@@ -9,9 +9,12 @@ Schedule per level:
            n-vertex frontier.  This replaces BOTH the 2D transpose and
            fold phases (there is no second axis to exchange along), so
            the entire wire volume of a 1D level is the allgather.
-  local  : top-down — edge-parallel SpMSV over the strip T[V_i, :]
-           (select-source, min semiring); bottom-up — in-neighbor scan
-           of unvisited owned rows.  Discovered children are *always
+  local  : top-down — SpMSV over the strip T[V_i, :] (select-source,
+           min semiring) through the LocalOps entry (core/local_ops.py):
+           edge-parallel dense, strip-CSR Pallas gather, or the
+           strip-DCSC Pallas kernel over non-empty global columns
+           (kernels/spmsv/strip.py); bottom-up — in-neighbor scan of
+           unvisited owned rows.  Discovered children are *always
            locally owned* (the strip holds every edge into V_i), so the
            parent update is local and fold-free.
 
@@ -37,11 +40,24 @@ from repro.core.steps import zero_counters
 
 class LevelArgs1D(NamedTuple):
     """Static/per-search context threaded into 1D level steps.  Local
-    discovery is always the dense edge-parallel path (make_bfs_fn_1d
-    rejects other modes), so there is no local_mode switch here."""
+    discovery goes through the LocalOps entry (core/local_ops.py) —
+    dense edge-parallel, strip-CSR kernel, or the strip-DCSC Pallas
+    kernel all plug in behind the same two closures."""
     part: "object"            # Partition1D (static)
     axis: str                 # the single mesh axis name
     use_edge_dst: bool = False  # bottom-up: read per-edge rows (no search)
+    local_mode: str = "dense"  # "dense" | "kernel" (Pallas)
+    storage: str = "csr"      # "csr" | "dcsc" (strip pointer compression)
+    cap_f: int = 0            # kernel csr: frontier capacity (0 = n)
+    maxdeg: int = 0           # kernel mode: max column-segment length
+    ops: "object" = None      # LocalOps entry (None = look up from strings)
+
+
+def _resolve_ops(args: "LevelArgs1D"):
+    if args.ops is not None:
+        return args.ops
+    from repro.core.local_ops import get_local_ops
+    return get_local_ops("1d", args.local_mode, args.storage)
 
 
 def expand_frontier_1d(front: jax.Array, axis: str):
@@ -72,13 +88,12 @@ def topdown_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
     n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
     ctr["use_expand"] = n_f * (part.p - 1)           # sparse-id equivalent
 
-    # --- Local discovery: SpMSV over the strip (global source ids) ------
-    from repro.kernels.spmsv.ref import spmsv_dense
-    cand = spmsv_dense(g["edge_src"], g["row_idx"], g["nnz"], f_all,
-                       part.chunk, jnp.int32(0))
-    e_mask = jnp.arange(g["edge_src"].shape[0]) < g["nnz"]
-    ctr["edges_examined"] = lax.psum(
-        jnp.sum(e_mask, dtype=jnp.float32), args.axis)
+    # --- Local discovery: SpMSV over the strip (global source ids, so
+    # col_offset = 0; format-specific work lives in the LocalOps entry) --
+    cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
+                                                part.chunk, jnp.int32(0),
+                                                args)
+    ctr["edges_examined"] = lax.psum(ex_local, args.axis)
     ctr["edges_useful"] = lax.psum(
         jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
         args.axis)
@@ -103,11 +118,11 @@ def bottomup_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
     ctr["wire_expand"] = wire
     ctr["use_expand"] = jnp.float32(part.n / 64.0) * (part.p - 1)
 
-    from repro.kernels.bottomup.ref import bottomup_substep
     cvec = (pi != -1).astype(jnp.int32)
-    ve = g["edge_dst"] if args.use_edge_dst else None
-    seg_par = bottomup_substep(g["row_ptr"], g["col_idx"], f_words, cvec,
-                               jnp.int32(0), g["nnz"], ve_win=ve)
+    ve = g["edge_dst"] if args.use_edge_dst and "edge_dst" in g else None
+    seg_par = _resolve_ops(args).bottomup(g["row_ptr"], g["col_idx"],
+                                          f_words, cvec, jnp.int32(0),
+                                          g["nnz"], ve)
     newly = (pi == -1) & (seg_par != INT_INF)
     pi = jnp.where(newly, seg_par, pi)
 

@@ -16,6 +16,25 @@ All arrays are statically padded to per-block capacity ``cap`` (XLA needs
 static shapes); ``nnz[(i,j)]`` masks the tail.  ``edge_src``/``edge_dst``
 are explicit per-edge locals for the edge-parallel jnp path (the Pallas
 kernels use the pointer arrays instead).
+
+Strip DCSC and the §5.1 storage charge against 1D
+-------------------------------------------------
+The paper's §5.1 argument for 2D is a *storage* argument against 1D: a
+1D row strip T[V_i, :] spans all n source columns, so an uncompressed
+CSC col_ptr costs n+1 words on EVERY processor — O(n*p) aggregate, vs
+O(n*(pr+pc)) for the 2D blocks — which is why this repo's 1D path was
+edge-parallel dense-only at first.  Strip DCSC answers that charge the
+same way DCSC answers it for hypersparse 2D blocks: ``Blocked1DGraph``
+stores, per strip, only the non-empty *global* source columns ``jc``
+with pointers ``cp`` into the CSC-ordered ``row_idx`` — O(nzc) <= O(m/p)
+words per strip, independent of n.  Because the ids in ``jc`` are
+global, the strip SpMSV (kernels/spmsv/strip.py) tests them directly
+against the allgathered frontier bitmap with col_offset = 0; no O(n)
+pointer array is ever materialized on the device.  The uncompressed
+strip ``col_ptr`` can be built host-side on request
+(``with_col_ptr=True``, opt-in) so benchmarks can *measure* the
+blow-up Fig. 6-style via ``storage_words("csr")`` vs
+``storage_words("dcsc")``.
 """
 from __future__ import annotations
 
@@ -94,9 +113,17 @@ class Blocked1DGraph:
     Unlike the 2D format, source-column indices are *global* ids (the
     strip spans every column), so the top-down SpMSV and bottom-up scan
     run with ``col_offset = 0`` against the full allgathered frontier.
-    No per-column pointer array is stored: the 1D top-down path is
-    edge-parallel (the O(n) aggregate col_ptr per processor is exactly
-    the storage blow-up the paper's §5.1 charges against 1D CSR).
+    Two top-down pointer compressions are available per strip:
+
+      * strip CSC ``col_ptr`` (n+1 words/processor) — the O(n) aggregate
+        blow-up the paper's §5.1 charges against 1D; kept so the charge
+        can be *measured* (``storage_words("csr")``)
+      * strip DCSC ``(jc, cp)`` over non-empty global source columns —
+        O(nzc) words, the compression that makes 1D compressed formats
+        viable (``storage_words("dcsc")``, kernels/spmsv/strip.py)
+
+    The dense edge-parallel path (``edge_src``/``row_idx``) needs no
+    pointers at all.
     """
     part: Partition1D
     m_input: int
@@ -108,10 +135,17 @@ class Blocked1DGraph:
     row_ptr: np.ndarray   # (p, chunk+1) i32
     col_idx: np.ndarray   # (p, cap) i32 GLOBAL source u, CSR order
     edge_dst: np.ndarray  # (p, cap) i32 local dest v, CSR order
+    # --- strip DCSC (top-down pointer compression) ---
+    jc: np.ndarray        # (p, cap_nzc)   i32 non-empty GLOBAL source cols
+    cp: np.ndarray        # (p, cap_nzc+1) i32 ptrs into row_idx
     # --- per-block / per-vertex metadata ---
     nnz: np.ndarray       # (p,) i32
+    nzc: np.ndarray       # (p,) i32 non-empty columns per strip
     deg_A: np.ndarray     # (p, chunk) i32 out-degree of owned vertices
     cap: int
+    cap_nzc: int
+    maxdeg_col: int       # max CSC column-segment length over all strips
+    col_ptr: "np.ndarray | None" = None   # (p, n+1) i32, the §5.1 blow-up
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = {}
@@ -121,19 +155,36 @@ class Blocked1DGraph:
                 out[f.name] = v
         return out
 
-    def storage_words(self) -> Dict[str, int]:
-        """i32 accounting mirroring BlockedGraph.storage_words: index
-        arrays in both orientations + the CSR row pointers."""
-        idx = 2 * self.cap * self.part.p
-        ptr = (self.part.chunk + 1) * self.part.p
-        return {"index_i32": idx, "pointer_i32": ptr,
-                "total_i32": idx + ptr}
+    def storage_words(self, mode: str) -> Dict[str, int]:
+        """i32 accounting mirroring BlockedGraph.storage_words(mode).
+        Index arrays are mode-independent; "csr" charges the (n+1)-per-
+        strip top-down col_ptr (the §5.1 1D blow-up) while "dcsc"
+        charges 2*nzc+2 per strip — the strip-DCSC pointer savings.
+        Both include the (chunk+1)-per-strip bottom-up row_ptr."""
+        p = self.part.p
+        idx = 2 * self.cap * p
+        bu_ptr = (self.part.chunk + 1) * p
+        if mode == "csr":
+            ptr = (self.part.n + 1) * p + bu_ptr
+        elif mode == "dcsc":
+            ptr = int(2 * self.nzc.sum()) + 2 * p + bu_ptr
+        else:
+            raise ValueError(mode)
+        return {"index_i32": idx, "pointer_i32": int(ptr),
+                "total_i32": idx + int(ptr)}
 
 
 def build_blocked_1d(edges: EdgeList, p: int, align: int = 128,
-                     cap_pad: int = 128) -> Blocked1DGraph:
+                     cap_pad: int = 128,
+                     with_col_ptr: bool = False) -> Blocked1DGraph:
     """Partition edges u->v by owner of the *destination* v into p row
-    strips; pad every strip to a common static capacity."""
+    strips; pad every strip to a common static capacity.
+
+    ``with_col_ptr=True`` additionally materializes the (p, n+1)
+    uncompressed strip CSC pointer — O(n*p) host words, wanted ONLY by
+    the local_mode="kernel" / storage="csr" comparison cell of Fig. 6
+    (measuring that blow-up is its purpose); dense and strip-DCSC runs
+    never ship it, so it is opt-in."""
     part = make_partition_1d(edges.n, p, align)
     chunk = part.chunk
     u, v = edges.src.astype(np.int64), edges.dst.astype(np.int64)
@@ -166,6 +217,40 @@ def build_blocked_1d(edges: EdgeList, p: int, align: int = 128,
     cnt = np.bincount(flat, minlength=p * chunk).reshape(p, chunk)
     row_ptr[:, 1:] = np.cumsum(cnt, axis=1)
 
+    # strip DCSC: doubly compressed (jc, cp) over the strip's non-empty
+    # GLOBAL source columns.  edge_src rows are sorted by u, so unique's
+    # first-occurrence indices are exactly the CSC segment starts.
+    nzc = np.zeros(p, dtype=np.int64)
+    uniq = []
+    maxdeg_col = 0
+    for b in range(p):
+        k = int(nnz[b])
+        uu, first = np.unique(edge_src[b, :k], return_index=True)
+        if k == 0:
+            uu, first = uu[:0], first[:0]
+        uniq.append((uu, first))
+        nzc[b] = uu.size
+        if uu.size:
+            maxdeg_col = max(maxdeg_col,
+                             int(np.diff(np.append(first, k)).max()))
+    cap_nzc = _round_up(max(int(nzc.max()), 1), 8)
+    jc = np.full((p, cap_nzc), part.n, dtype=np.int64)       # sentinel = n
+    cp = np.zeros((p, cap_nzc + 1), dtype=np.int64)
+    for b in range(p):
+        uu, first = uniq[b]
+        jc[b, :uu.size] = uu
+        cp[b, :uu.size] = first
+        cp[b, uu.size:] = int(nnz[b])
+
+    col_ptr = None
+    if with_col_ptr:
+        # the uncompressed strip CSC pointer — (n+1) words per strip,
+        # materialized on request so the §5.1 blow-up is measurable
+        cnt = np.bincount(blk * np.int64(part.n) + u,
+                          minlength=p * part.n).reshape(p, part.n)
+        col_ptr = np.zeros((p, part.n + 1), dtype=np.int64)
+        col_ptr[:, 1:] = np.cumsum(cnt, axis=1)
+
     deg = np.bincount(u, minlength=part.n).astype(np.int64)
 
     def _i32(x):
@@ -176,7 +261,10 @@ def build_blocked_1d(edges: EdgeList, p: int, align: int = 128,
         edge_src=_i32(edge_src), row_idx=_i32(row_idx),
         row_ptr=_i32(row_ptr), col_idx=_i32(col_idx_),
         edge_dst=_i32(edge_dst_),
-        nnz=_i32(nnz), deg_A=_i32(deg.reshape(p, chunk)), cap=cap,
+        jc=_i32(jc), cp=_i32(cp),
+        nnz=_i32(nnz), nzc=_i32(nzc), deg_A=_i32(deg.reshape(p, chunk)),
+        cap=cap, cap_nzc=cap_nzc, maxdeg_col=maxdeg_col,
+        col_ptr=None if col_ptr is None else _i32(col_ptr),
     )
 
 

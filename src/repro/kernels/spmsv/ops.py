@@ -4,6 +4,9 @@
 (fast, O(n*pr) aggregate memory); ``spmsv_block_dcsc`` goes through the
 compressed (JC, CP) arrays with a binary search per frontier vertex —
 the paper's hypersparse trade-off (§5.1), reproduced faithfully.
+``spmsv_strip_dcsc`` is the 1D counterpart: it walks the strip's
+non-empty global columns against the allgathered frontier bitmap
+(kernels/spmsv/strip.py), so no O(n) pointer array ever exists.
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.frontier import INT_INF
 from repro.kernels.spmsv.spmsv import gather_segments
+from repro.kernels.spmsv.strip import gather_strip_segments
 
 
 def _scatter_min(dst, ids, col_offset, nr, cap_f):
@@ -39,6 +43,20 @@ def spmsv_block_csr(col_ptr, row_idx, f_cj, nr: int, col_offset,
     dst = gather_segments(starts, lens, row_idx, cap_f=cap_f,
                           maxdeg=maxdeg, interpret=interpret)
     return _scatter_min(dst, ids, col_offset, nr, cap_f)
+
+
+def spmsv_strip_dcsc(jc, cp, nzc, row_idx, f_words, nr: int,
+                     *, maxdeg: int, interpret: bool = True):
+    """1D strip SpMSV over doubly compressed global source columns: the
+    kernel walks the nzc slots, bitmap-testing each column against the
+    allgathered frontier, so there is no per-frontier-vertex lookup and
+    no O(n) pointer array.  Column ids are already global (col_offset is
+    structurally 0 in the strip layout)."""
+    dst = gather_strip_segments(jc, cp, nzc, row_idx, f_words,
+                                maxdeg=maxdeg, interpret=interpret)
+    # sentinel slots (jc = n) gather nothing, so their parent value is
+    # never scattered; col_offset=0 keeps the ids global
+    return _scatter_min(dst, jc, jnp.int32(0), nr, jc.shape[0])
 
 
 def spmsv_block_dcsc(jc, cp, nzc, row_idx, f_cj, nr: int, col_offset,

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: strip SpMSV for the 1D row decomposition.
+
+A 1D strip T[V_i, :] spans *every* global source column, so an
+uncompressed CSC col_ptr costs n+1 words per processor — the O(n)
+aggregate blow-up the paper's §5.1 charges against 1D compressed
+storage, and the reason the 1D path was dense-only until now.  Strip
+DCSC stores just the strip's non-empty global columns (``jc``) with
+pointers (``cp``) into the CSC-ordered ``row_idx``, O(nzc) words.
+
+The kernel walks ``jc`` — NOT the frontier — because nzc <= nnz is the
+strip-local quantity while the frontier is global: for each non-empty
+column slot it tests the column id against the allgathered frontier
+*bitmap* (packed uint32 words, the same representation the 1D expand
+allgathers), and gathers that column's contiguous segment in ET-wide
+tiles, reusing the ragged-gather tiling of the 2D kernel (spmsv.py).
+Skipped tiles (column not in frontier / beyond the segment) cost only
+control overhead, so traffic ~ sum of frontier-column degrees.
+
+As in the 2D split, the SPA accumulation (scatter-min of global source
+ids, the paper's §5.2 sparse accumulator) stays outside the kernel where
+XLA lowers it to a sorted segment reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _strip_gather_kernel(jc_ref, cp_ref, nzc_ref, fw_ref, ridx_ref, out_ref,
+                         *, et: int, n: int):
+    g = pl.program_id(0)          # non-empty-column slot
+    t = pl.program_id(1)          # edge tile within the slot's segment
+    u = jc_ref[g]                 # GLOBAL source column id (sentinel = n)
+    uc = jnp.minimum(u, n - 1)
+    w = fw_ref[uc >> 5]           # frontier bitmap word (uint32)
+    in_f = ((w >> (uc.astype(jnp.uint32) & jnp.uint32(31))) & 1) == 1
+    live = (g < nzc_ref[0]) & (u < n) & in_f
+    s = cp_ref[g]
+    ln = jnp.where(live, cp_ref[g + 1] - s, 0)
+    off = t * et
+
+    @pl.when(off < ln)
+    def _():
+        lane = jnp.arange(et, dtype=jnp.int32)
+        v = pl.load(ridx_ref, (pl.ds(s + off, et),))
+        out_ref[0, :] = jnp.where(off + lane < ln, v, jnp.int32(-1))
+
+    @pl.when(off >= ln)
+    def _():
+        out_ref[0, :] = jnp.full((et,), -1, jnp.int32)
+
+
+def gather_strip_segments(jc, cp, nzc, row_idx, f_words, *, maxdeg: int,
+                          et: int = 256, interpret: bool = True):
+    """(cap_nzc,) DCSC columns -> (cap_nzc, maxdeg) gathered dest rows of
+    the columns present in the frontier bitmap, -1 padded.  row_idx must
+    be padded by >= et beyond the last segment."""
+    n = f_words.shape[0] * 32
+    cap_nzc = jc.shape[0]
+    maxdeg = ((max(maxdeg, 1) + et - 1) // et) * et
+    grid = (cap_nzc, maxdeg // et)
+    return pl.pallas_call(
+        functools.partial(_strip_gather_kernel, et=et, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # jc
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # cp
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # nzc (1,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # frontier words
+            pl.BlockSpec(row_idx.shape, lambda g, t: (0,)),   # edge ids (VMEM)
+        ],
+        out_specs=pl.BlockSpec((1, et), lambda g, t: (g, t)),
+        out_shape=jax.ShapeDtypeStruct((cap_nzc, maxdeg), jnp.int32),
+        interpret=interpret,
+    )(jc.astype(jnp.int32), cp.astype(jnp.int32),
+      jnp.asarray(nzc, jnp.int32).reshape(1), f_words, row_idx)

@@ -27,7 +27,8 @@ from repro.configs.base import (BFSConfig, BFSShape, GNNConfig, GNNShape,
                                 get_config)
 from repro.core import steps as bfs_steps
 from repro.core.compat import shard_map
-from repro.core.bfs import make_bfs_fn, _DENSE_KEYS
+from repro.core.bfs import make_bfs_fn
+from repro.core.local_ops import get_local_ops
 from repro.core.partition import make_partition
 from repro.graph.sampler import khop_sample
 from repro.models import autoint as ai
@@ -408,13 +409,14 @@ def build_bfs_cell(cfg: BFSConfig, shape: BFSShape, mesh,
             "scale": shape.scale, "storage": cfg.storage}
 
     if level_only:
+        ops = get_local_ops("2d", "dense", cfg.storage)
         args_l = bfs_steps.LevelArgs(
             part=part, row_axis="data", col_axis="model",
             fold_mode=cfg.fold_mode, perm=tuple(part.transpose_perm()),
             cap_seg=cap_seg, storage=cfg.storage,
             use_edge_dst=cfg.use_edge_dst,
-            compact_updates=cfg.compact_updates)
-        keys = _DENSE_KEYS
+            compact_updates=cfg.compact_updates, ops=ops)
+        keys = ops.keys
 
         def level_fn(g, pi, front):
             g = {k: v[0, 0] for k, v in g.items()}

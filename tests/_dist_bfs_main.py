@@ -118,6 +118,25 @@ def main():
             for k in ("wire_transpose", "wire_fold", "wire_rotate",
                       "wire_updates"):
                 assert r1.counters[k] == 0.0, (k, r1.counters[k])
+        # LocalOps acceptance: the 1D strip kernels (CSR gather and the
+        # strip-DCSC Pallas SpMSV) must match the serial oracle and the
+        # 2D depths on the same graph
+        edges = rmat_graph(9, edge_factor=8, seed=9)
+        root = int(np.flatnonzero(edges.out_degrees())[0])
+        g1 = build_blocked_1d(edges, p, align=32, cap_pad=32,
+                              with_col_ptr=True)
+        g2 = build_blocked(edges, 4, 4, align=32, cap_pad=32)
+        r2 = run_bfs(g2, root, BFSConfig(), make_local_mesh(4, 4))
+        d2 = depths_from_parents(edges.n, r2.parents, root)
+        for storage in ("dcsc", "csr"):
+            r1 = run_bfs(g1, root,
+                         BFSConfig(decomposition="1d", storage=storage),
+                         make_local_mesh_1d(p), local_mode="kernel")
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       root, r1.parents)
+            assert ok, (storage, msg)
+            d1 = depths_from_parents(edges.n, r1.parents, root)
+            assert np.array_equal(d1, d2), (storage, int((d1 != d2).sum()))
         print("OK oned")
     elif mode == "multiroot":
         edges = rmat_graph(10, edge_factor=8, seed=9)

@@ -61,6 +61,35 @@ def test_spmsv_kernel_matches_dense(nc, nr, density, fdensity):
     np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
 
 
+@pytest.mark.parametrize("chunk,n", [(32, 64), (64, 256), (96, 32)])
+@pytest.mark.parametrize("fdensity", [0.0, 0.2, 1.0])
+def test_spmsv_strip_kernel_matches_dense(chunk, n, fdensity):
+    """The 1D strip kernel (global column ids, bitmap test inside the
+    kernel, col_offset structurally 0) must match the dense oracle."""
+    rng = np.random.default_rng(chunk + n + int(10 * fdensity))
+    m = 4 * chunk
+    u = np.sort(rng.integers(0, n, m)).astype(np.int32)   # global sources
+    v = rng.integers(0, chunk, m).astype(np.int32)        # local dests
+    order = np.lexsort((v, u))
+    u, v = u[order], v[order]
+    f = rng.random(n) < fdensity
+    f_words = pack_bits(jnp.asarray(f))
+    want = spmsv_dense(jnp.asarray(u), jnp.asarray(v), jnp.int32(m),
+                       jnp.asarray(f), chunk, jnp.int32(0))
+    # strip DCSC over the sorted edges
+    cols, first = np.unique(u, return_index=True)
+    nzc = len(cols)
+    cap_nzc = nzc + 5
+    jc = np.full(cap_nzc, n, np.int32)
+    cp = np.full(cap_nzc + 1, m, np.int32)
+    jc[:nzc], cp[:nzc] = cols, first
+    maxdeg = int(np.diff(np.append(first, m)).max())
+    got = spmsv_ops.spmsv_strip_dcsc(
+        jnp.asarray(jc), jnp.asarray(cp), jnp.int32(nzc),
+        jnp.pad(jnp.asarray(v), (0, 256)), f_words, chunk, maxdeg=maxdeg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("chunk,nc", [(32, 64), (128, 128), (256, 32)])
 @pytest.mark.parametrize("fdensity,cdensity", [
     (0.0, 0.0), (0.3, 0.0), (0.3, 0.5), (1.0, 0.9), (1.0, 1.0),
