@@ -54,7 +54,9 @@ def sweep_decompositions(scale: int, grid, n_devices: int = 16,
         ctr = res["counters"] or {}
         phases = ";".join(f"{k}={ctr.get(k, 0.0):.3e}" for k in _PHASES)
         emit(f"bfs_s{scale}_{decomp}_{grid[0]}x{grid[1]}",
-             res["hmean_s"] * 1e6, f"teps={res['teps']:.3e};{phases}")
+             res["hmean_s"] * 1e6,
+             f"teps={res['teps']:.3e};"
+             f"compile_s={res.get('compile_s', 0.0):.3f};{phases}")
         out.append(res)
     return out
 
@@ -81,17 +83,40 @@ def sweep_local_formats(scale: int, grid, n_devices: int = 16,
             emit(f"bfs_fmt_s{scale}_{decomp}_{storage}_{local_mode}",
                  res["hmean_s"] * 1e6,
                  f"teps={res['teps']:.3e};pointer_i32={mem['pointer_i32']};"
-                 f"total_i32={mem['total_i32']}")
+                 f"total_i32={mem['total_i32']};"
+                 f"compile_s={res.get('compile_s', 0.0):.3f}")
             rows.append({"scale": scale, "grid": list(grid),
                          "decomposition": decomp, "storage": storage,
                          "local_mode": local_mode,
                          "us_per_call": res["hmean_s"] * 1e6,
                          "teps": res["teps"], "storage_words": mem,
+                         "compile_s": res.get("compile_s"),
+                         "ship_s": res.get("ship_s"),
+                         "times_s": res.get("times"),
                          "counters": res["counters"]})
     if out_json:
         with open(out_json, "w") as f:
             json.dump(rows, f, indent=2)
     return rows
+
+
+def engine_timing_summary(rows) -> List[Dict]:
+    """Compile-vs-traverse split per sweep row (the engine's promise:
+    per-root time excludes compilation), as a compact artifact."""
+    out = []
+    for r in rows:
+        times = r.get("times_s") or []
+        out.append({
+            "name": f"s{r['scale']}_{r['decomposition']}_{r['storage']}_"
+                    f"{r['local_mode']}",
+            "compile_s": r.get("compile_s"),
+            "ship_s": r.get("ship_s"),
+            "traverse_s_per_root": times,
+            "traverse_hmean_s": (len(times) / sum(1.0 / t for t in times)
+                                 if times else None),
+            "teps": r.get("teps"),
+        })
+    return out
 
 
 def _main():
@@ -105,12 +130,18 @@ def _main():
     ap.add_argument("--roots", type=int, default=2)
     ap.add_argument("--local-mode", default="kernel")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--timings-out", default=None,
+                    help="write the compile-vs-traverse split per combo "
+                         "(engine path) as a JSON artifact")
     a = ap.parse_args()
     pr, pc = map(int, a.grid.split("x"))
     print("name,us_per_call,derived")
-    sweep_local_formats(a.scale, (pr, pc), n_devices=a.devices,
-                        roots=a.roots, local_mode=a.local_mode,
-                        out_json=a.out, validate=True)
+    rows = sweep_local_formats(a.scale, (pr, pc), n_devices=a.devices,
+                               roots=a.roots, local_mode=a.local_mode,
+                               out_json=a.out, validate=True)
+    if a.timings_out:
+        with open(a.timings_out, "w") as f:
+            json.dump(engine_timing_summary(rows), f, indent=2)
 
 
 if __name__ == "__main__":

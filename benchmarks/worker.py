@@ -1,5 +1,10 @@
 """Benchmark subprocess worker: runs BFS configurations on a forced
-multi-device host platform and reports timings + counters as JSON."""
+multi-device host platform and reports timings + counters as JSON.
+
+Uses the plan/compile/run session API (repro.core.engine): the graph is
+shipped and the search program compiled exactly once (``compile_s`` /
+``ship_s`` in the output), then every root is pure traversal time — the
+paper's §7 methodology without hand-rolled device_put/warmup loops."""
 import json
 import sys
 import time
@@ -10,12 +15,11 @@ import numpy as np
 def main():
     payload = json.loads(sys.stdin.read())
     from repro.configs.base import BFSConfig
-    from repro.core.bfs import run_bfs, make_bfs_fn
+    from repro.core.engine import plan_bfs
     from repro.core.ref import validate_parents
     from repro.graph.formats import build_blocked, build_blocked_1d
     from repro.graph.rmat import rmat_graph, scale_free_standin, random_source
     from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
-    import jax
 
     if payload.get("graph") == "twitter_standin":
         edges = scale_free_standin(payload["n"], payload["m"], seed=7)
@@ -31,9 +35,8 @@ def main():
     rng = np.random.default_rng(0)
     roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
 
-    # build once, time many (excludes compile); a 1d run reuses the same
-    # grid spec as p = pr*pc strips so sweeps pair up on identical graphs
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    # a 1d run reuses the same grid spec as p = pr*pc strips so sweeps
+    # pair up on identical graphs
     local_mode = payload.get("local_mode", "dense")
     if decomp == "1d":
         # the uncompressed strip col_ptr is only materialized for the
@@ -43,32 +46,29 @@ def main():
         g = build_blocked_1d(edges, pr * pc, align=32, cap_pad=32,
                              with_col_ptr=need_col_ptr)
         mesh = make_local_mesh_1d(pr * pc)
-        part = g.part
-        fn, keys = make_bfs_fn(mesh, part, cfg, local_mode=local_mode,
-                               maxdeg=g.maxdeg_col,
-                               cap_f=payload.get("cap_f", 0))
-        sh = NamedSharding(mesh, P("data"))
     else:
         g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
         mesh = make_local_mesh(pr, pc)
-        part = g.part
-        fn, keys = make_bfs_fn(mesh, part, cfg, g.cap_seg,
-                               local_mode=local_mode, maxdeg=g.maxdeg_col)
-        sh = NamedSharding(mesh, P("data", "model"))
-    arrs = g.device_arrays()
-    gdev = {k: jax.device_put(np.asarray(arrs[k]), sh) for k in keys}
-    fn(gdev, roots[0])[0].block_until_ready()          # warmup/compile
+    plan = plan_bfs(g, cfg, mesh, local_mode=local_mode,
+                    cap_f=payload.get("cap_f", 0))
+    eng = plan.compile()                  # ship once + jit once
+    # one untimed warmup execution: AOT compile never runs the program,
+    # so first-dispatch/allocation overhead must not land on root 0
+    eng.search(int(roots[0]))[0].block_until_ready()
     times, counters = [], None
     for r in roots:
+        # time the device search only (block on parents), converting to
+        # host results outside the timed region — same methodology as
+        # the pre-engine hand-rolled loop
         t0 = time.perf_counter()
-        pi, lvl, ctr, stats = fn(gdev, r)
-        pi.block_until_ready()
+        out = eng.search(int(r))
+        out[0].block_until_ready()
         times.append(time.perf_counter() - t0)
-        counters = {k: float(v) for k, v in ctr.items()}
+        res = eng.to_result(out)
+        counters = res.counters
         if payload.get("validate"):
-            ok, msg = validate_parents(
-                edges.n, edges.src, edges.dst, int(r),
-                np.asarray(pi).reshape(part.n)[: part.n_orig])
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst, int(r),
+                                       res.parents)
             assert ok, msg
     hmean = len(times) / sum(1.0 / t for t in times)
     # both graph formats share the storage_words(mode) accounting API
@@ -78,6 +78,7 @@ def main():
         "hmean_s": hmean, "times": times, "m_input": edges.m_input,
         "m": edges.m, "n": edges.n, "counters": counters,
         "decomposition": decomp,
+        "compile_s": eng.compile_s, "ship_s": eng.ship_s,
         "teps": edges.m_input / hmean, **mem,
     }))
 

@@ -1,6 +1,9 @@
 """End-to-end Graph500-style driver (the paper's §7 methodology):
-generate R-MAT, run BFS from 16 random roots, report the harmonic-mean
-TEPS, validate every tree, compare comm volume to the §6 model.
+generate R-MAT, build the distributed graph + compile the search ONCE
+(plan → compile → run, repro.core.engine), run BFS from 16 random
+roots, report the harmonic-mean TEPS over pure per-root traversal time
+(compile/ship reported separately), validate every tree, compare comm
+volume to the §6 model.
 
     PYTHONPATH=src python examples/graph500_bfs.py --scale 13 --grid 2x2
 
@@ -24,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import BFSConfig
 from repro.core import comm_model
-from repro.core.bfs import run_bfs
+from repro.core.engine import plan_bfs
 from repro.core.metrics import harmonic_mean, teps
 from repro.core.ref import validate_parents
 from repro.graph.formats import build_blocked, build_blocked_1d
@@ -59,20 +62,31 @@ def main():
                     direction_optimizing=not args.no_diropt)
     rng = np.random.default_rng(0)
 
+    # plan + compile once; every root below is pure traversal (the §7
+    # methodology: harmonic-mean TEPS must not be smeared by compilation)
+    engine = plan_bfs(graph, cfg, mesh, local_mode=args.local_mode).compile()
+    engine.search(0)[0].block_until_ready()    # untimed first-dispatch warmup
+    print(f"compile: {engine.compile_s:.3f}s, graph ship: "
+          f"{engine.ship_s:.3f}s (paid once, reused for {args.roots} roots)")
+
     rates, res = [], None
     for i in range(args.roots):
         root = random_source(edges, rng)
+        # time the device search only; host-side result conversion and
+        # validation stay outside the timed region (worker.py methodology)
         t0 = time.perf_counter()
-        res = run_bfs(graph, root, cfg, mesh, local_mode=args.local_mode)
+        out = engine.search(root)
+        out[0].block_until_ready()
         dt = time.perf_counter() - t0
+        res = engine.to_result(out)
         ok, msg = validate_parents(edges.n, edges.src, edges.dst, root,
                                    res.parents)
         assert ok, msg
         rates.append(teps(edges.m_input, dt))
-        print(f"root {root:>8}: {res.n_levels} levels, "
+        print(f"root {root:>8}: {res.n_levels} levels, {dt*1e3:8.2f} ms, "
               f"{rates[-1]:.3e} TEPS, valid")
-    print(f"\nharmonic-mean TEPS over {args.roots} roots: "
-          f"{harmonic_mean(rates):.3e}")
+    print(f"\nharmonic-mean TEPS over {args.roots} roots "
+          f"(traversal only): {harmonic_mean(rates):.3e}")
     useful = sum(v for k, v in res.counters.items() if k.startswith('use_'))
     if args.decomposition == "1d":
         wt = comm_model.topdown_1d_words(edges.m, pr * pc)

@@ -1,161 +1,42 @@
-"""Public distributed-BFS API: direction-optimizing BFS in either the 1D
-row decomposition (paper Alg. 1/2 distributed baseline) or the 2D
-checkerboard (paper §4.4), selected by ``BFSConfig.decomposition``
-("1d" | "2d").
+"""Legacy one-shot BFS API, kept as thin wrappers over the session API.
 
-The whole search (level loop + direction switching + both step kinds) is
-a single shard_map'd, jitted program — over mesh axes (row, col) =
-(pr, pc) for 2D, over the single row axis of size p for 1D.  Direction
-switching uses the Beamer heuristics the paper cites (§4.4): top-down ->
-bottom-up when m_f > m_u/alpha, back when n_f < n/beta; the level loop,
-heuristics, per-level stats, and COUNTER_KEYS accounting are shared
-between the decompositions (``_search_loop``), so 1D-vs-2D wire-volume
-comparisons (the paper's Eq. 2) read identical counter dicts out of
-``BFSResult.counters``.
+The real machinery lives in two places now:
+
+  core/decomp.py — the decomposition registry ("1d" row strips | "2d"
+                   checkerboard): partition/graph types, mesh-axis
+                   layout, LevelArgs builders, whole-search bodies.
+  core/engine.py — plan_bfs -> BFSPlan -> compile() -> BFSEngine, the
+                   compile-once / traverse-many session the Graph500
+                   drivers use.
+
+These wrappers preserve the pre-engine call signatures: the
+``make_*_bfs_fn`` builders return a jitted ``fn(graph_arrays, root)``
+plus the shipping keys, and ``run_bfs`` plans + compiles + runs a single
+root end-to-end (paying the per-call compile the engine exists to
+avoid — prefer ``plan_bfs(...).compile()`` for anything that traverses
+more than once).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Dict, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+import dataclasses
 
 from repro.configs.base import BFSConfig
-from repro.core import steps
-from repro.core.compat import shard_map
-from repro.core.local_ops import get_local_ops
+from repro.core.decomp import MAX_LEVELS  # noqa: F401  (re-export)
+from repro.core.engine import (BFSBatchResult, BFSResult,  # noqa: F401
+                               plan_bfs, plan_for_part)
 from repro.core.partition import Partition1D, Partition2D
-from repro.core.steps import LevelArgs, bottomup_level, topdown_level, zero_counters
-from repro.core.steps_1d import (LevelArgs1D, bottomup_level_1d,
-                                 topdown_level_1d)
-from repro.graph.formats import Blocked1DGraph, BlockedGraph
-
-MAX_LEVELS = 64
-
-# Which graph arrays a given (decomposition, local_mode, storage) combo
-# ships is declared by its LocalOps registry entry (core/local_ops.py);
-# the old _DENSE_KEYS/_KERNEL_KEYS tuples live there as entry.keys.
-
-
-@dataclass
-class BFSResult:
-    parents: np.ndarray          # (n_orig,)
-    n_levels: int
-    counters: Dict[str, float]   # whole-search totals (paper 64-bit words)
-    level_stats: np.ndarray      # (MAX_LEVELS, 4): n_f, m_f, mode, used
-
-
-def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
-                 sync, td_level, bu_level):
-    """The decomposition-agnostic whole-search level loop: frontier-size /
-    edge-mass heuristics, per-level stats, counter accumulation.
-    ``td_level`` / ``bu_level`` are (pi, front) -> (pi, front, ctr) step
-    closures over the local graph ``g`` (already squeezed)."""
-    pi0 = jnp.where(gidx == root, root, jnp.int32(-1))
-    front0 = gidx == root
-    stats0 = jnp.zeros((MAX_LEVELS, 4), jnp.float32)
-
-    def cond(st):
-        pi, front, mode, level, n_f, ctr, stats = st
-        return (level < MAX_LEVELS) & (n_f > 0)
-
-    def body(st):
-        pi, front, mode, level, n_f, ctr, stats = st
-        m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
-                               dtype=jnp.float32), axes)
-        m_u = lax.psum(jnp.sum(jnp.where(pi == -1, g["deg_A"], 0),
-                               dtype=jnp.float32), axes)
-        if cfg.direction_optimizing:
-            go_bu = (mode == 0) & (m_f > m_u / cfg.alpha)
-            go_td = (mode == 1) & (n_f < n_total / cfg.beta)
-            new_mode = jnp.where(go_bu, 1, jnp.where(go_td, 0, mode))
-        else:
-            new_mode = mode
-        stats = stats.at[level].set(
-            jnp.stack([n_f, m_f, new_mode.astype(jnp.float32),
-                       jnp.float32(1)]))
-
-        pi2, front2, c2 = lax.cond(
-            new_mode == 1,
-            lambda pf: bu_level(pf[0], pf[1]),
-            lambda pf: td_level(pf[0], pf[1]),
-            (pi, front))
-        ctr = {k: ctr[k] + c2[k] for k in ctr}
-        n_f2 = lax.psum(jnp.sum(front2, dtype=jnp.float32), axes)
-        # cond feeds on the cross-slice max so batched searches stay in
-        # lockstep (heuristics above use the per-slice n_f)
-        n_sync = lax.pmax(n_f2, sync) if sync != axes else n_f2
-        return (pi2, front2, new_mode, level + 1, n_sync, ctr, stats)
-
-    st = (pi0, front0, jnp.int32(0), jnp.int32(0), jnp.float32(1.0),
-          zero_counters(), stats0)
-    pi, front, mode, level, n_f, ctr, stats = lax.while_loop(cond, body, st)
-    return pi, level, ctr, stats
-
-
-def _bfs_body(g, root, *, part: Partition2D, args: LevelArgs, cfg: BFSConfig,
-              n_real_edges: float, sync_axis: Optional[str] = None):
-    """sync_axis: when searches run batched across an outer axis (pods),
-    the level loop must take the same trip count on every slice — the
-    loop continues while ANY slice has a live frontier (idle slices run
-    empty levels; collectives stay aligned)."""
-    pc, chunk = part.pc, part.chunk
-    axes = (args.row_axis, args.col_axis)
-    sync = axes + ((sync_axis,) if sync_axis else ())
-    i = lax.axis_index(args.row_axis)
-    j = lax.axis_index(args.col_axis)
-    g = {k: v[0, 0] for k, v in g.items()}
-
-    gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
-    pi, level, ctr, stats = _search_loop(
-        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
-        td_level=lambda pi, f: topdown_level(g, pi, f, args),
-        bu_level=lambda pi, f: bottomup_level(g, pi, f, args))
-    return pi[None, None], level, ctr, stats
-
-
-def _bfs_body_1d(g, root, *, part: Partition1D, args: LevelArgs1D,
-                 cfg: BFSConfig, sync_axis: Optional[str] = None):
-    """1D row-decomposition whole-search body over the single mesh axis."""
-    axes = (args.axis,)
-    sync = axes + ((sync_axis,) if sync_axis else ())
-    i = lax.axis_index(args.axis)
-    g = {k: v[0] for k, v in g.items()}
-
-    gidx = (i * part.chunk + jnp.arange(part.chunk)).astype(jnp.int32)
-    pi, level, ctr, stats = _search_loop(
-        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
-        td_level=lambda pi, f: topdown_level_1d(g, pi, f, args),
-        bu_level=lambda pi, f: bottomup_level_1d(g, pi, f, args))
-    return pi[None], level, ctr, stats
 
 
 def make_bfs_fn_1d(mesh, part: Partition1D, cfg: BFSConfig,
                    axis: str = "data", local_mode: str = "dense",
                    maxdeg: int = 0, cap_f: int = 0):
-    """Build the jitted whole-search 1D BFS function.  The LocalOps
-    registry supplies the strip's local-discovery closures and shipping
-    keys for ``(local_mode, cfg.storage)`` — dense edge-parallel,
-    strip-CSR gather, or the strip-DCSC Pallas kernel.  Returns
+    """Build the jitted whole-search 1D BFS function.  Returns
     fn(graph_arrays_dict, root) -> (pi, level, ctr, stats)."""
-    ops = get_local_ops("1d", local_mode, cfg.storage)
-    args = LevelArgs1D(part=part, axis=axis,
-                       use_edge_dst=cfg.use_edge_dst,
-                       local_mode=local_mode, storage=cfg.storage,
-                       cap_f=cap_f, maxdeg=maxdeg, ops=ops)
-    body = functools.partial(_bfs_body_1d, part=part, args=args, cfg=cfg)
-    gspec = {k: P(axis) for k in ops.keys}
-    mapped = shard_map(
-        body, mesh=mesh,
-        in_specs=(gspec, P()),
-        out_specs=(P(axis), P(), {k: P() for k in steps.COUNTER_KEYS}, P()),
-        check_vma=False)
-    return jax.jit(mapped), ops.keys
+    if cfg.decomposition != "1d":
+        cfg = dataclasses.replace(cfg, decomposition="1d")
+    plan = plan_for_part(part, cfg, mesh, row_axis=axis,
+                         local_mode=local_mode, maxdeg=maxdeg, cap_f=cap_f)
+    return plan.build_fn(), plan.keys
 
 
 def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
@@ -163,41 +44,14 @@ def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
                 local_mode: str = "dense", n_real_edges: float = 0.0,
                 maxdeg: int = 0, cap_f: int = 0):
     """Build the jitted whole-search BFS function for a given mesh/graph
-    geometry, dispatching on ``cfg.decomposition`` ("1d" | "2d"; the 1D
-    path uses ``row_axis`` as its single mesh axis and ignores the fold/
-    transpose knobs).  Returns fn(graph_arrays_dict, root) ->
+    geometry, dispatching on ``cfg.decomposition`` through the
+    decomposition registry.  Returns fn(graph_arrays_dict, root) ->
     (pi, level, ctr, stats)."""
-    if getattr(cfg, "decomposition", "2d") == "1d":
-        if not isinstance(part, Partition1D):
-            raise TypeError(f"decomposition='1d' needs a Partition1D, "
-                            f"got {type(part).__name__}")
-        return make_bfs_fn_1d(mesh, part, cfg, axis=row_axis,
-                              local_mode=local_mode, maxdeg=maxdeg,
-                              cap_f=cap_f)
-    if cap_seg <= 0:
-        # the bottom-up branch always compiles (lax.cond), and a zero
-        # edge window would silently discover nothing
-        raise ValueError("2d decomposition needs cap_seg > 0 "
-                         "(pass graph.cap_seg)")
-    ops = get_local_ops("2d", local_mode, cfg.storage)
-    args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
-                     fold_mode=cfg.fold_mode,
-                     perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
-                     local_mode=local_mode, storage=cfg.storage,
-                     cap_f=cap_f, maxdeg=maxdeg,
-                     use_edge_dst=cfg.use_edge_dst,
-                     compact_updates=cfg.compact_updates, ops=ops)
-    body = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
-                             n_real_edges=n_real_edges)
-    gspec = {k: P(row_axis, col_axis) for k in ops.keys}
-    mapped = shard_map(
-        body, mesh=mesh,
-        in_specs=(gspec, P()),
-        out_specs=(P(row_axis, col_axis), P(), {
-            k: P() for k in steps.COUNTER_KEYS}, P()),
-        check_vma=False,   # pallas_call outputs carry no vma annotation
-    )
-    return jax.jit(mapped), ops.keys
+    plan = plan_for_part(part, cfg, mesh, row_axis=row_axis,
+                         col_axis=col_axis, local_mode=local_mode,
+                         cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
+                         n_real_edges=n_real_edges)
+    return plan.build_fn(), plan.keys
 
 
 def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
@@ -209,78 +63,27 @@ def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
     """Batched independent BFS roots sharded over the pod axis — the
     multi-pod Graph500 pattern (16-64 roots per benchmark run, pods are
     embarrassingly parallel across roots; graph blocks replicated across
-    pods, zero inter-pod traffic).  Routed through the same LocalOps
-    registry as the single-root builders, so ``local_mode``/``cap_f``
-    select the kernel paths here too instead of always shipping the
-    dense key set."""
-    ops = get_local_ops("2d", local_mode, cfg.storage)
-    args = LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
-                     fold_mode=cfg.fold_mode,
-                     perm=tuple(part.transpose_perm()), cap_seg=cap_seg,
-                     local_mode=local_mode, storage=cfg.storage,
-                     cap_f=cap_f, maxdeg=maxdeg,
-                     use_edge_dst=cfg.use_edge_dst,
-                     compact_updates=cfg.compact_updates, ops=ops)
-    body1 = functools.partial(_bfs_body, part=part, args=args, cfg=cfg,
-                              n_real_edges=n_real_edges,
-                              sync_axis=pod_axis)
-
-    def multi_body(g, roots):
-        # roots: (n_roots_local,) — scan full searches over local roots
-        def one(carry, root):
-            pi, level, ctr, stats = body1(g, root)
-            return carry, (pi[0, 0], level)
-        _, (pis, levels) = lax.scan(one, jnp.int32(0), roots.reshape(-1))
-        return pis[None, None], levels
-
-    gspec = {k: P(row_axis, col_axis) for k in ops.keys}
-    mapped = shard_map(
-        multi_body, mesh=mesh,
-        in_specs=(gspec, P(pod_axis)),
-        out_specs=(P(row_axis, col_axis, pod_axis, None), P(pod_axis)),
-        check_vma=False)
-    return jax.jit(mapped), ops.keys
+    pods, zero inter-pod traffic).  Works in any registered
+    decomposition; prefer ``BFSEngine.run_batch`` for new code.
+    ``n_roots`` is documentation only — the roots-per-pod count is fixed
+    by the shape of the roots array the program is compiled against."""
+    del n_roots
+    plan = plan_for_part(part, cfg, mesh, row_axis=row_axis,
+                         col_axis=col_axis, local_mode=local_mode,
+                         cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
+                         n_real_edges=n_real_edges)
+    return plan.build_batch_fn(pod_axis), plan.keys
 
 
 def run_bfs(graph, root: int, cfg: BFSConfig, mesh,
             row_axis: str = "data", col_axis: str = "model",
             local_mode: str = "dense", cap_f: int = 0) -> BFSResult:
-    """End-to-end convenience wrapper: ship blocks, run, validate shapes.
+    """One-shot convenience wrapper: plan, compile, run a single root.
 
     ``graph`` is a BlockedGraph (2D) or Blocked1DGraph (1D); which one
-    must match ``cfg.decomposition``.  The returned BFSResult is
-    layout-independent (parents indexed by global vertex id, counters in
-    the shared COUNTER_KEYS units), so callers can diff 1D vs 2D runs
-    directly."""
-    part = graph.part
-    one_d = getattr(cfg, "decomposition", "2d") == "1d"
-    if one_d != isinstance(graph, Blocked1DGraph):
-        raise TypeError(
-            f"cfg.decomposition={cfg.decomposition!r} does not match "
-            f"graph type {type(graph).__name__}")
-    if one_d:
-        fn, keys = make_bfs_fn(mesh, part, cfg, row_axis=row_axis,
-                               local_mode=local_mode,
-                               maxdeg=graph.maxdeg_col, cap_f=cap_f)
-        sh = NamedSharding(mesh, P(row_axis))
-    else:
-        fn, keys = make_bfs_fn(mesh, part, cfg, graph.cap_seg, row_axis,
-                               col_axis, local_mode, n_real_edges=graph.m,
-                               maxdeg=graph.maxdeg_col, cap_f=cap_f)
-        sh = NamedSharding(mesh, P(row_axis, col_axis))
-    arrays = graph.device_arrays()
-    missing = [k for k in keys if k not in arrays]
-    if missing:
-        raise ValueError(
-            f"graph lacks arrays {missing} needed by local_mode="
-            f"{local_mode!r}/storage={cfg.storage!r} (1d csr kernels need "
-            f"build_blocked_1d(..., with_col_ptr=True))")
-    gdev = {k: jax.device_put(np.asarray(arrays[k]), sh) for k in keys}
-    pi, level, ctr, stats = fn(gdev, jnp.int32(root))
-    pi = np.asarray(pi).reshape(part.n)[: part.n_orig]
-    return BFSResult(
-        parents=pi.astype(np.int64),
-        n_levels=int(level),
-        counters={k: float(v) for k, v in ctr.items()},
-        level_stats=np.asarray(stats),
-    )
+    must match ``cfg.decomposition``.  Ships + compiles on EVERY call —
+    use ``plan_bfs(graph, cfg, mesh).compile()`` and run the engine when
+    traversing from more than one root."""
+    plan = plan_bfs(graph, cfg, mesh, row_axis=row_axis, col_axis=col_axis,
+                    local_mode=local_mode, cap_f=cap_f)
+    return plan.compile().run(root)

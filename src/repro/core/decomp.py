@@ -1,0 +1,253 @@
+"""Decomposition registry: the pluggable graph-partitioning axis of the
+traversal engine.
+
+PR 2 made *local* discovery pluggable (core/local_ops.py: CSR vs DCSC x
+dense vs Pallas kernels); this module does the same for the
+*decomposition* — how the adjacency matrix and the vertex vectors are
+split over mesh axes.  A ``Decomposition`` entry, registered under the
+``BFSConfig.decomposition`` string, declares everything the session API
+(core/engine.py) needs to build a search program:
+
+  * ``partition_cls`` / ``graph_cls`` — which partition and blocked
+    graph format the entry operates on (plan validation)
+  * ``n_axes`` + ``axis_sizes``      — its mesh-axis layout: how many
+    mesh axes the graph spans and what size each must have
+  * ``make_level_args``              — the LevelArgs builder (statics
+    like cap_seg/maxdeg/cap_f threaded from the plan, not ad-hoc kwargs)
+  * ``body``                         — the whole-search shard_map body
+  * ``validate``                     — entry-specific plan checks
+
+plus in/out PartitionSpec helpers (``graph_spec`` / ``out_specs`` /
+``batch_out_specs``) shared by the single-root and pod-batched
+programs.  Registered entries:
+
+  "2d" — the paper's checkerboard (§4.4): axes (row, col) = (pr, pc),
+         expand = transpose + allgather, fold along the processor row,
+         systolic bottom-up rotation.
+  "1d" — row strips (Alg. 1/2 baseline): one axis of size p, expand =
+         one allgather, no fold/transpose/rotation.
+
+A future 1D-column or 1.5D decomposition is a new entry here (its own
+steps module + LevelArgs + body), not an edit to the engine — see the
+"adding a decomposition" guide in README.md.
+
+The decomposition-agnostic pieces also live here: ``_search_loop`` (the
+level loop + Beamer direction heuristics + COUNTER_KEYS accounting
+shared by every entry) and the two registered bodies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BFSConfig
+from repro.core.partition import Partition1D, Partition2D
+from repro.core.steps import (COUNTER_KEYS, LevelArgs, bottomup_level,
+                              topdown_level, zero_counters)
+from repro.core.steps_1d import (LevelArgs1D, bottomup_level_1d,
+                                 topdown_level_1d)
+from repro.graph.formats import Blocked1DGraph, BlockedGraph
+
+MAX_LEVELS = 64
+
+
+@dataclass(frozen=True)
+class PlanStatics:
+    """Static (compile-time) scalars a plan resolves once from the graph
+    and config instead of threading them as per-call kwargs."""
+    cap_seg: int = 0          # 2D bottom-up sub-step edge window
+    maxdeg: int = 0           # kernel mode: max column-segment length
+    cap_f: int = 0            # kernel mode: frontier capacity (0 = nc)
+    n_real_edges: float = 0.0  # unpadded edge count (TEPS/metadata)
+
+
+@dataclass(frozen=True)
+class Decomposition:
+    """One registered decomposition (see module docstring)."""
+    name: str                 # registry key, = BFSConfig.decomposition
+    partition_cls: type       # Partition1D | Partition2D
+    graph_cls: type           # Blocked1DGraph | BlockedGraph
+    n_axes: int               # mesh axes the graph blocks shard over
+    axis_sizes: Callable      # (part) -> required mesh-axis sizes
+    make_level_args: Callable  # (part, cfg, ops, axes, statics) -> LevelArgs*
+    body: Callable            # (g, root, *, part, args, cfg, sync_axis)
+    validate: Callable        # (part, statics) -> None (raises on bad plan)
+
+    # ---- PartitionSpec layout (shared by single-root + batch programs) ----
+
+    def graph_spec(self, axes: Tuple[str, ...]) -> P:
+        return P(*axes)
+
+    def out_specs(self, axes: Tuple[str, ...]):
+        """(parents, level, counters, level_stats) specs."""
+        return (P(*axes), P(), {k: P() for k in COUNTER_KEYS}, P())
+
+    def batch_out_specs(self, axes: Tuple[str, ...], pod_axis: str):
+        """(parents-per-root, levels) specs for the pod-batched program."""
+        return (P(*(axes + (pod_axis, None))), P(pod_axis))
+
+
+_REGISTRY: Dict[str, Decomposition] = {}
+
+
+def register_decomposition(entry: Decomposition) -> Decomposition:
+    if entry.name in _REGISTRY:
+        raise ValueError(f"duplicate decomposition {entry.name!r}")
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_decomposition(name: str) -> Decomposition:
+    if name not in _REGISTRY:
+        raise ValueError(f"no decomposition registered for {name!r}; "
+                         f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def registered_decompositions() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# The decomposition-agnostic whole-search level loop
+# ---------------------------------------------------------------------------
+
+
+def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
+                 sync, td_level, bu_level):
+    """Frontier-size / edge-mass direction heuristics, per-level stats,
+    counter accumulation.  ``td_level`` / ``bu_level`` are
+    (pi, front) -> (pi, front, ctr) step closures over the local graph
+    ``g`` (already squeezed)."""
+    pi0 = jnp.where(gidx == root, root, jnp.int32(-1))
+    front0 = gidx == root
+    stats0 = jnp.zeros((MAX_LEVELS, 4), jnp.float32)
+
+    def cond(st):
+        pi, front, mode, level, n_f, ctr, stats = st
+        return (level < MAX_LEVELS) & (n_f > 0)
+
+    def body(st):
+        pi, front, mode, level, n_f, ctr, stats = st
+        m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
+                               dtype=jnp.float32), axes)
+        m_u = lax.psum(jnp.sum(jnp.where(pi == -1, g["deg_A"], 0),
+                               dtype=jnp.float32), axes)
+        if cfg.direction_optimizing:
+            go_bu = (mode == 0) & (m_f > m_u / cfg.alpha)
+            go_td = (mode == 1) & (n_f < n_total / cfg.beta)
+            new_mode = jnp.where(go_bu, 1, jnp.where(go_td, 0, mode))
+        else:
+            new_mode = mode
+        stats = stats.at[level].set(
+            jnp.stack([n_f, m_f, new_mode.astype(jnp.float32),
+                       jnp.float32(1)]))
+
+        pi2, front2, c2 = lax.cond(
+            new_mode == 1,
+            lambda pf: bu_level(pf[0], pf[1]),
+            lambda pf: td_level(pf[0], pf[1]),
+            (pi, front))
+        ctr = {k: ctr[k] + c2[k] for k in ctr}
+        n_f2 = lax.psum(jnp.sum(front2, dtype=jnp.float32), axes)
+        # cond feeds on the cross-slice max so batched searches stay in
+        # lockstep (heuristics above use the per-slice n_f)
+        n_sync = lax.pmax(n_f2, sync) if sync != axes else n_f2
+        return (pi2, front2, new_mode, level + 1, n_sync, ctr, stats)
+
+    st = (pi0, front0, jnp.int32(0), jnp.int32(0), jnp.float32(1.0),
+          zero_counters(), stats0)
+    pi, front, mode, level, n_f, ctr, stats = lax.while_loop(cond, body, st)
+    return pi, level, ctr, stats
+
+
+# ---------------------------------------------------------------------------
+# 2D checkerboard entry
+# ---------------------------------------------------------------------------
+
+
+def _bfs_body_2d(g, root, *, part: Partition2D, args: LevelArgs,
+                 cfg: BFSConfig, sync_axis: Optional[str] = None):
+    """sync_axis: when searches run batched across an outer axis (pods),
+    the level loop must take the same trip count on every slice — the
+    loop continues while ANY slice has a live frontier (idle slices run
+    empty levels; collectives stay aligned)."""
+    pc, chunk = part.pc, part.chunk
+    axes = (args.row_axis, args.col_axis)
+    sync = axes + ((sync_axis,) if sync_axis else ())
+    i = lax.axis_index(args.row_axis)
+    j = lax.axis_index(args.col_axis)
+    g = {k: v[0, 0] for k, v in g.items()}
+
+    gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
+    pi, level, ctr, stats = _search_loop(
+        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
+        td_level=lambda pi, f: topdown_level(g, pi, f, args),
+        bu_level=lambda pi, f: bottomup_level(g, pi, f, args))
+    return pi[None, None], level, ctr, stats
+
+
+def _make_args_2d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs:
+    row_axis, col_axis = axes
+    return LevelArgs(part=part, row_axis=row_axis, col_axis=col_axis,
+                     fold_mode=cfg.fold_mode,
+                     perm=tuple(part.transpose_perm()),
+                     cap_seg=statics.cap_seg,
+                     local_mode=ops.local_mode, storage=cfg.storage,
+                     cap_f=statics.cap_f, maxdeg=statics.maxdeg,
+                     use_edge_dst=cfg.use_edge_dst,
+                     compact_updates=cfg.compact_updates, ops=ops)
+
+
+def _validate_2d(part, statics: PlanStatics) -> None:
+    if statics.cap_seg <= 0:
+        # the bottom-up branch always compiles (lax.cond), and a zero
+        # edge window would silently discover nothing
+        raise ValueError("2d decomposition needs cap_seg > 0 "
+                         "(pass graph.cap_seg)")
+
+
+register_decomposition(Decomposition(
+    name="2d", partition_cls=Partition2D, graph_cls=BlockedGraph,
+    n_axes=2, axis_sizes=lambda part: (part.pr, part.pc),
+    make_level_args=_make_args_2d, body=_bfs_body_2d,
+    validate=_validate_2d))
+
+
+# ---------------------------------------------------------------------------
+# 1D row-strip entry
+# ---------------------------------------------------------------------------
+
+
+def _bfs_body_1d(g, root, *, part: Partition1D, args: LevelArgs1D,
+                 cfg: BFSConfig, sync_axis: Optional[str] = None):
+    """1D row-decomposition whole-search body over the single mesh axis."""
+    axes = (args.axis,)
+    sync = axes + ((sync_axis,) if sync_axis else ())
+    i = lax.axis_index(args.axis)
+    g = {k: v[0] for k, v in g.items()}
+
+    gidx = (i * part.chunk + jnp.arange(part.chunk)).astype(jnp.int32)
+    pi, level, ctr, stats = _search_loop(
+        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
+        td_level=lambda pi, f: topdown_level_1d(g, pi, f, args),
+        bu_level=lambda pi, f: bottomup_level_1d(g, pi, f, args))
+    return pi[None], level, ctr, stats
+
+
+def _make_args_1d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs1D:
+    return LevelArgs1D(part=part, axis=axes[0],
+                       use_edge_dst=cfg.use_edge_dst,
+                       local_mode=ops.local_mode, storage=cfg.storage,
+                       cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops)
+
+
+register_decomposition(Decomposition(
+    name="1d", partition_cls=Partition1D, graph_cls=Blocked1DGraph,
+    n_axes=1, axis_sizes=lambda part: (part.p,),
+    make_level_args=_make_args_1d, body=_bfs_body_1d,
+    validate=lambda part, statics: None))

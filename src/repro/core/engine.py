@@ -1,0 +1,347 @@
+"""BFSEngine: the plan → compile → run traversal session API.
+
+The Graph500 methodology (paper §7) is "build the distributed graph
+once, then run BFS from 16–64 roots" — so the engine splits the old
+one-shot ``run_bfs`` into three stages:
+
+  plan    ``plan_bfs(graph, cfg, mesh) -> BFSPlan``
+          resolves the Decomposition entry (core/decomp.py) and the
+          LocalOps entry (core/local_ops.py), pulls the static scalars
+          (cap_seg / maxdeg_col / n_real_edges) from the graph, and
+          validates arrays/partition/mesh/config coherence up front —
+          every shape error surfaces here, before any device work.
+
+  compile ``BFSPlan.compile() -> BFSEngine``
+          ships the graph device arrays ONCE (one device_put per
+          shipped key) and AOT-compiles the whole-search program ONCE
+          (one jit trace); ``engine.ship_s`` / ``engine.compile_s``
+          report the two costs separately.
+
+  run     ``BFSEngine.run(root)`` / ``run_many(roots)`` reuse the
+          shipped arrays and compiled executable across roots — per-root
+          time is pure traversal, never smeared by recompiles.
+          ``run_batch(roots, pod_axis=...)`` compiles the pod-parallel
+          multi-source program (roots sharded over the pod axis, graph
+          replicated, searches in lockstep) — available in EVERY
+          registered decomposition, not just 2D.
+
+``plan_for_part`` is the graph-less variant for abstract/dry-run
+callers (launch/cells.py) that lower against ShapeDtypeStructs; it
+skips the graph-array checks but performs all partition/mesh/config
+validation.  The legacy ``make_*_bfs_fn`` builders and ``run_bfs``
+(core/bfs.py) are thin wrappers over these two entry points.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import BFSConfig
+from repro.core.compat import shard_map
+from repro.core.decomp import (Decomposition, PlanStatics,
+                               get_decomposition)
+from repro.core.local_ops import LocalOps, get_local_ops
+
+
+@dataclass
+class BFSResult:
+    parents: np.ndarray          # (n_orig,)
+    n_levels: int
+    counters: Dict[str, float]   # whole-search totals (paper 64-bit words)
+    level_stats: np.ndarray      # (MAX_LEVELS, 4): n_f, m_f, mode, used
+
+
+@dataclass
+class BFSBatchResult:
+    """Pod-batched multi-source searches (counters are not accumulated
+    per root in the batched program; use ``run``/``run_many`` for the
+    Eq. 2 accounting)."""
+    roots: np.ndarray            # (n_roots,)
+    parents: np.ndarray          # (n_roots, n_orig)
+    n_levels: np.ndarray         # (n_roots,)
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BFSPlan:
+    """A frozen, validated description of one traversal session: which
+    decomposition + local format run on which mesh axes with which
+    static capacities.  Build programs with ``build_fn`` /
+    ``build_batch_fn`` (abstract callers), or ``compile()`` into a
+    BFSEngine when a concrete graph is attached."""
+    part: Any                     # Partition1D | Partition2D
+    cfg: BFSConfig
+    mesh: Any
+    entry: Decomposition
+    ops: LocalOps
+    axes: Tuple[str, ...]         # mesh axes the graph blocks shard over
+    statics: PlanStatics
+    graph: Any = None             # Blocked*Graph; None for abstract plans
+
+    @property
+    def keys(self) -> Tuple[str, ...]:
+        """Graph device arrays this plan ships (from the LocalOps entry)."""
+        return self.ops.keys
+
+    def level_args(self):
+        return self.entry.make_level_args(self.part, self.cfg, self.ops,
+                                          self.axes, self.statics)
+
+    # ---- program builders -------------------------------------------------
+
+    def build_fn(self, sync_axis: Optional[str] = None, trace_hook=None):
+        """The jitted single-root whole-search program:
+        fn(graph_arrays_dict, root) -> (pi, level, ctr, stats).
+        ``trace_hook`` (if given) is called once per jit trace — the
+        engine uses it to assert compile-once behavior."""
+        body = functools.partial(self.entry.body, part=self.part,
+                                 args=self.level_args(), cfg=self.cfg,
+                                 sync_axis=sync_axis)
+        if trace_hook is not None:
+            inner = body
+
+            def body(g, root):
+                trace_hook()
+                return inner(g, root)
+
+        gspec = {k: self.entry.graph_spec(self.axes) for k in self.keys}
+        mapped = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(gspec, P()),
+            out_specs=self.entry.out_specs(self.axes),
+            check_vma=False)   # pallas_call outputs carry no vma annotation
+        return jax.jit(mapped)
+
+    def build_batch_fn(self, pod_axis: str, trace_hook=None):
+        """The jitted pod-batched multi-source program: independent
+        whole searches scanned over each pod's local roots (the
+        roots-per-pod count is fixed by the shape of the roots array the
+        program is compiled against), pods embarrassingly parallel
+        (graph replicated across pods, zero inter-pod traffic, level
+        loops in lockstep via sync_axis).
+        fn(graph_arrays_dict, roots) -> (pis, levels)."""
+        if pod_axis not in self.mesh.shape:
+            raise ValueError(f"mesh has no {pod_axis!r} axis for batched "
+                             f"roots; axes are {tuple(self.mesh.shape)}")
+        body1 = functools.partial(self.entry.body, part=self.part,
+                                  args=self.level_args(), cfg=self.cfg,
+                                  sync_axis=pod_axis)
+        n_axes = self.entry.n_axes
+
+        def multi_body(g, roots):
+            if trace_hook is not None:
+                trace_hook()
+
+            # roots: (n_roots_local,) — scan full searches over local roots
+            def one(carry, root):
+                pi, level, ctr, stats = body1(g, root)
+                return carry, (pi.reshape(pi.shape[-1]), level)
+
+            _, (pis, levels) = lax.scan(one, jnp.int32(0), roots.reshape(-1))
+            return pis.reshape((1,) * n_axes + pis.shape), levels
+
+        gspec = {k: self.entry.graph_spec(self.axes) for k in self.keys}
+        mapped = shard_map(
+            multi_body, mesh=self.mesh,
+            in_specs=(gspec, P(pod_axis)),
+            out_specs=self.entry.batch_out_specs(self.axes, pod_axis),
+            check_vma=False)
+        return jax.jit(mapped)
+
+    # ---- session ----------------------------------------------------------
+
+    def compile(self) -> "BFSEngine":
+        """Ship the graph and compile the search program (both once);
+        the returned engine runs any number of roots against them."""
+        return BFSEngine(self)
+
+
+def plan_for_part(part, cfg: BFSConfig, mesh, *,
+                  row_axis: str = "data", col_axis: str = "model",
+                  local_mode: str = "dense", cap_seg: int = 0,
+                  maxdeg: int = 0, cap_f: int = 0,
+                  n_real_edges: float = 0.0) -> BFSPlan:
+    """A graph-less plan from an explicit partition + static capacities
+    (abstract lowering, compat builders).  Performs every validation
+    that does not need concrete arrays."""
+    entry = get_decomposition(cfg.decomposition)
+    if not isinstance(part, entry.partition_cls):
+        raise TypeError(
+            f"decomposition={cfg.decomposition!r} needs a "
+            f"{entry.partition_cls.__name__}, got {type(part).__name__}")
+    axes = (row_axis, col_axis)[: entry.n_axes]
+    for ax, want in zip(axes, entry.axis_sizes(part)):
+        if ax not in mesh.shape:
+            raise ValueError(
+                f"mesh has no {ax!r} axis needed by decomposition="
+                f"{cfg.decomposition!r}; axes are {tuple(mesh.shape)}")
+        if mesh.shape[ax] != want:
+            raise ValueError(
+                f"mesh axis {ax!r} has size {mesh.shape[ax]} but the "
+                f"partition needs {want} (grid "
+                f"{tuple(entry.axis_sizes(part))})")
+    ops = get_local_ops(cfg.decomposition, local_mode, cfg.storage)
+    statics = PlanStatics(cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
+                          n_real_edges=n_real_edges)
+    entry.validate(part, statics)
+    return BFSPlan(part=part, cfg=cfg, mesh=mesh, entry=entry, ops=ops,
+                   axes=axes, statics=statics)
+
+
+def plan_bfs(graph, cfg: BFSConfig, mesh, *,
+             row_axis: str = "data", col_axis: str = "model",
+             local_mode: str = "dense", cap_f: int = 0) -> BFSPlan:
+    """Plan a traversal session over a concrete blocked graph.
+
+    Resolves the decomposition + LocalOps entries, pulls the static
+    scalars (cap_seg, maxdeg_col, n_real_edges) from the graph, and
+    validates graph/partition/mesh/config coherence — including that
+    the graph actually carries every array the chosen local format
+    ships."""
+    entry = get_decomposition(cfg.decomposition)
+    if not isinstance(graph, entry.graph_cls):
+        raise TypeError(
+            f"cfg.decomposition={cfg.decomposition!r} does not match "
+            f"graph type {type(graph).__name__}")
+    plan = plan_for_part(
+        graph.part, cfg, mesh, row_axis=row_axis, col_axis=col_axis,
+        local_mode=local_mode, cap_f=cap_f,
+        cap_seg=getattr(graph, "cap_seg", 0), maxdeg=graph.maxdeg_col,
+        n_real_edges=float(graph.m))
+    arrays = graph.device_arrays()
+    missing = [k for k in plan.keys if k not in arrays]
+    if missing:
+        raise ValueError(
+            f"graph lacks arrays {missing} needed by local_mode="
+            f"{local_mode!r}/storage={cfg.storage!r} (1d csr kernels need "
+            f"build_blocked_1d(..., with_col_ptr=True))")
+    return replace(plan, graph=graph)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class BFSEngine:
+    """A compiled traversal session: graph shipped once, program
+    compiled once, traversed from many roots.
+
+    Attributes:
+      ship_s          seconds to device_put the graph arrays (once)
+      compile_s       seconds to trace + XLA-compile the single-root
+                      search (once, eagerly at compile())
+      batch_compile_s cumulative seconds compiling pod-batched programs
+                      (one per distinct roots-per-pod shape, lazily at
+                      first run_batch)
+      trace_count     jit traces taken so far (1 after compile;
+                      run/run_many never add more — asserted by tests)
+    """
+
+    def __init__(self, plan: BFSPlan):
+        if plan.graph is None:
+            raise ValueError("plan has no graph attached; build it with "
+                             "plan_bfs(graph, cfg, mesh)")
+        self.plan = plan
+        self.trace_count = 0
+        sh = NamedSharding(plan.mesh, P(*plan.axes))
+        arrays = plan.graph.device_arrays()
+        t0 = time.perf_counter()
+        self._gdev = {k: jax.device_put(np.asarray(arrays[k]), sh)
+                      for k in plan.keys}
+        for v in self._gdev.values():
+            v.block_until_ready()
+        t1 = time.perf_counter()
+        self.ship_s = t1 - t0
+        fn = plan.build_fn(trace_hook=self._count_trace)
+        # AOT lower+compile: the trace happens here exactly once, and
+        # run() calls the compiled executable directly — per-root time
+        # can never include compilation.
+        self._exec = fn.lower(self._gdev, jnp.int32(0)).compile()
+        self.compile_s = time.perf_counter() - t1
+        self.batch_compile_s = 0.0
+        self._batch_cache: Dict[Tuple[str, int], Any] = {}
+
+    def _count_trace(self):
+        self.trace_count += 1
+
+    # ---- single-root ------------------------------------------------------
+
+    def search(self, root: int):
+        """Device-level search: (pi, level, ctr, stats) as device arrays,
+        no host transfer.  Benchmark loops time this (+ a block on pi)
+        so per-root numbers measure traversal, not result conversion."""
+        return self._exec(self._gdev, jnp.int32(root))
+
+    def to_result(self, out) -> BFSResult:
+        """Convert a ``search`` output to the layout-independent
+        BFSResult (parents indexed by global vertex id, counters in the
+        shared COUNTER_KEYS units) so 1D and 2D runs diff directly."""
+        part = self.plan.part
+        pi, level, ctr, stats = out
+        pi = np.asarray(pi).reshape(part.n)[: part.n_orig]
+        return BFSResult(
+            parents=pi.astype(np.int64),
+            n_levels=int(level),
+            counters={k: float(v) for k, v in ctr.items()},
+            level_stats=np.asarray(stats),
+        )
+
+    def run(self, root: int) -> BFSResult:
+        """One whole search against the shipped graph, results on host."""
+        return self.to_result(self.search(root))
+
+    def run_many(self, roots: Sequence[int]) -> List[BFSResult]:
+        """The Graph500 loop: sequential searches from many roots, all
+        against the one shipped graph + compiled program."""
+        return [self.run(int(r)) for r in roots]
+
+    # ---- pod-batched multi-source -----------------------------------------
+
+    def run_batch(self, roots: Sequence[int],
+                  pod_axis: str = "pod") -> BFSBatchResult:
+        """Multi-source BFS with roots sharded over ``pod_axis``: each
+        pod scans its len(roots)/pods searches while the level loops
+        stay in lockstep.  Works in every registered decomposition (the
+        batched program is built from the same Decomposition entry as
+        the single-root one).  The batched executable is compiled once
+        per (pod_axis, roots-per-pod) shape and cached."""
+        mesh = self.plan.mesh
+        if pod_axis not in mesh.shape:
+            raise ValueError(f"mesh has no {pod_axis!r} axis for batched "
+                             f"roots; axes are {tuple(mesh.shape)}")
+        pods = mesh.shape[pod_axis]
+        roots = np.asarray(roots, dtype=np.int32).reshape(-1)
+        if roots.size == 0 or roots.size % pods:
+            raise ValueError(f"{roots.size} roots do not split evenly over "
+                             f"{pods} pods")
+        rdev = jax.device_put(roots, NamedSharding(mesh, P(pod_axis)))
+        key = (pod_axis, roots.size // pods)
+        if key not in self._batch_cache:
+            fn = self.plan.build_batch_fn(pod_axis,
+                                          trace_hook=self._count_trace)
+            t0 = time.perf_counter()
+            self._batch_cache[key] = fn.lower(self._gdev, rdev).compile()
+            self.batch_compile_s += time.perf_counter() - t0
+        pis, levels = self._batch_cache[key](self._gdev, rdev)
+        part, n_axes = self.plan.part, self.plan.entry.n_axes
+        # (*block_dims, n_roots, chunk) -> (n_roots, n) in layout A
+        pis = np.moveaxis(np.asarray(pis), n_axes, 0)
+        pis = pis.reshape(roots.size, part.n)[:, : part.n_orig]
+        return BFSBatchResult(
+            roots=roots.astype(np.int64),
+            parents=pis.astype(np.int64),
+            n_levels=np.asarray(levels).astype(np.int64),
+        )

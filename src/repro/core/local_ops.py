@@ -15,9 +15,10 @@ storage)``, declares
   * ``bottomup``       — the unvisited-row scan closure (one sub-step)
   * ``storage_words``  — the §5.1 word-accounting model for the format
 
-``make_bfs_fn`` / ``make_bfs_fn_1d`` / ``make_multiroot_bfs_fn`` look the
-entry up once at build time and thread it through LevelArgs; the step
-modules just call the closures.  Registered combos (Fig. 6 grid):
+The plan layer (``core/engine.py``) looks the entry up once at plan
+time and threads it through LevelArgs via the Decomposition entry's
+``make_level_args`` (``core/decomp.py``); the step modules just call
+the closures.  Registered combos (Fig. 6 grid):
 
   2d x {dense, kernel} x {csr, dcsc}   (dense ignores pointer storage)
   1d x {dense, kernel} x {csr, dcsc}   (kernel/dcsc = the Pallas strip

@@ -27,7 +27,7 @@ from repro.configs.base import (BFSConfig, BFSShape, GNNConfig, GNNShape,
                                 get_config)
 from repro.core import steps as bfs_steps
 from repro.core.compat import shard_map
-from repro.core.bfs import make_bfs_fn
+from repro.core.engine import plan_for_part
 from repro.core.local_ops import get_local_ops
 from repro.core.partition import make_partition
 from repro.graph.sampler import khop_sample
@@ -437,19 +437,20 @@ def build_bfs_cell(cfg: BFSConfig, shape: BFSShape, mesh,
         return Cell(mapped, (g_specs, pi, fr),
                     ({k: sh for k in g_specs}, sh, sh), label, meta)
 
+    # the engine's plan layer owns dispatch/validation; cells only need
+    # the abstract program, so they build a graph-less plan
+    plan = plan_for_part(part, cfg, mesh, cap_seg=cap_seg, maxdeg=1024,
+                         n_real_edges=float(m_est))
     if "pod" in mesh.axis_names and kwargs_get_multiroot(cfg):
-        from repro.core.bfs import make_multiroot_bfs_fn
         pods = mesh.shape["pod"]
-        fn, keys = make_multiroot_bfs_fn(mesh, part, cfg, cap_seg,
-                                         n_roots=pods, maxdeg=1024)
-        g_specs = _bfs_graph_specs(part, cap, cap_seg, keys)
+        fn = plan.build_batch_fn("pod")
+        g_specs = _bfs_graph_specs(part, cap, cap_seg, plan.keys)
         sh = NamedSharding(mesh, P("data", "model"))
         return Cell(fn, (g_specs, _sds((pods,), jnp.int32)),
                     ({k: sh for k in g_specs}, _ns(mesh, "pod")),
                     label + "/multiroot", {**meta, "n_roots": pods})
-    fn, keys = make_bfs_fn(mesh, part, cfg, cap_seg, "data", "model",
-                           local_mode="dense", maxdeg=1024)
-    g_specs = _bfs_graph_specs(part, cap, cap_seg, keys)
+    fn = plan.build_fn()
+    g_specs = _bfs_graph_specs(part, cap, cap_seg, plan.keys)
     sh = NamedSharding(mesh, P("data", "model"))
     return Cell(fn, (g_specs, _sds((), jnp.int32)),
                 ({k: sh for k in g_specs}, _ns(mesh)), label, meta)

@@ -34,20 +34,33 @@ def make_mesh(pr: int, pc: int, pods: int = 1):
     return jax.make_mesh((pr, pc), (ROW_AXIS, COL_AXIS))
 
 
-def make_local_mesh(pr: int = 1, pc: int = 1):
-    """Mesh over however many devices this process actually has."""
+def make_local_mesh(pr: int = 1, pc: int = 1, pods: int = 0):
+    """Mesh over however many devices this process actually has.
+    ``pods > 0`` prepends a pod axis of that size (pods=1 costs no extra
+    devices and enables ``BFSEngine.run_batch``)."""
     n = len(jax.devices())
-    if pr * pc > n:
-        raise ValueError(f"grid {pr}x{pc} needs {pr*pc} devices, have {n}")
-    devs = np.asarray(jax.devices()[: pr * pc]).reshape(pr, pc)
+    need = max(pods, 1) * pr * pc
+    if need > n:
+        raise ValueError(f"grid {pods or ''}{'x' if pods else ''}{pr}x{pc} "
+                         f"needs {need} devices, have {n}")
+    if pods > 0:
+        devs = np.asarray(jax.devices()[:need]).reshape(pods, pr, pc)
+        return jax.sharding.Mesh(devs, (POD_AXIS, ROW_AXIS, COL_AXIS))
+    devs = np.asarray(jax.devices()[:need]).reshape(pr, pc)
     return jax.sharding.Mesh(devs, (ROW_AXIS, COL_AXIS))
 
 
-def make_local_mesh_1d(p: int = 1):
+def make_local_mesh_1d(p: int = 1, pods: int = 0):
     """Single-axis mesh for the 1D row decomposition (axis name ROW_AXIS,
-    matching the default ``row_axis`` the BFS driver shards over)."""
+    matching the default ``row_axis`` the BFS driver shards over).
+    ``pods > 0`` prepends a pod axis for pod-batched multi-source runs —
+    the 1D counterpart of the multi-pod 2D mesh."""
     n = len(jax.devices())
-    if p > n:
-        raise ValueError(f"1d grid needs {p} devices, have {n}")
-    devs = np.asarray(jax.devices()[:p])
+    need = max(pods, 1) * p
+    if need > n:
+        raise ValueError(f"1d grid needs {need} devices, have {n}")
+    if pods > 0:
+        devs = np.asarray(jax.devices()[:need]).reshape(pods, p)
+        return jax.sharding.Mesh(devs, (POD_AXIS, ROW_AXIS))
+    devs = np.asarray(jax.devices()[:need])
     return jax.sharding.Mesh(devs, (ROW_AXIS,))

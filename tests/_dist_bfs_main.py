@@ -146,28 +146,55 @@ def main():
         check(edges, 2, 2, BFSConfig(), roots=roots)
         print("OK multiroot")
     elif mode == "multipod":
-        # pod-axis batched roots: graph replicated per pod, roots sharded
+        # pod-axis batched multi-source BFS through the engine, in BOTH
+        # decompositions (a named ROADMAP scenario): graph replicated
+        # per pod, roots sharded, level loops in lockstep.  Legacy
+        # make_multiroot_bfs_fn path also exercised for compat.
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.bfs import make_multiroot_bfs_fn
-        from repro.launch.mesh import make_mesh
+        from repro.core.engine import plan_bfs
         edges = rmat_graph(10, edge_factor=8, seed=9)
+        deg = edges.out_degrees()
+        roots = np.flatnonzero(deg > 0)[:8].astype(np.int32)
+
+        # 2D checkerboard under 2 pods x (2 x 2): 8 devices
         pods, pr, pc = 2, 2, 2
         g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
-        import numpy as _np
-        devs = _np.asarray(jax.devices()[: pods * pr * pc]).reshape(
+        devs = np.asarray(jax.devices()[: pods * pr * pc]).reshape(
             pods, pr, pc)
         mesh3 = jax.sharding.Mesh(devs, ("pod", "data", "model"))
+        eng2 = plan_bfs(g, BFSConfig(), mesh3).compile()
+        b2 = eng2.run_batch(roots)       # 4 searches per pod
+        for i, root in enumerate(roots):
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       int(root), b2.parents[i])
+            assert ok, ("2d", i, msg)
+
+        # 1D row strips under 2 pods x 8 strips: all 16 devices; depths
+        # must match the 2D batch root-for-root
+        g1 = build_blocked_1d(edges, 8, align=32, cap_pad=32)
+        devs1 = np.asarray(jax.devices()[:16]).reshape(2, 8)
+        mesh1 = jax.sharding.Mesh(devs1, ("pod", "data"))
+        eng1 = plan_bfs(g1, BFSConfig(decomposition="1d"), mesh1).compile()
+        b1 = eng1.run_batch(roots)
+        for i, root in enumerate(roots):
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       int(root), b1.parents[i])
+            assert ok, ("1d", i, msg)
+            d1 = depths_from_parents(edges.n, b1.parents[i], int(root))
+            d2 = depths_from_parents(edges.n, b2.parents[i], int(root))
+            assert np.array_equal(d1, d2), (i, int((d1 != d2).sum()))
+
+        # legacy builder still works over the registry path
         fn, keys = make_multiroot_bfs_fn(mesh3, g.part, BFSConfig(),
                                          g.cap_seg, n_roots=pods,
                                          maxdeg=g.maxdeg_col)
         arrs = g.device_arrays()
         sh = NamedSharding(mesh3, P("data", "model"))
         gdev = {k: jax.device_put(np.asarray(arrs[k]), sh) for k in keys}
-        deg = edges.out_degrees()
-        roots = np.flatnonzero(deg > 0)[:pods].astype(np.int32)
         pis, levels = fn(gdev, jax.device_put(
-            roots, NamedSharding(mesh3, P("pod"))))
+            roots[:pods], NamedSharding(mesh3, P("pod"))))
         pis = np.asarray(pis)            # (pr, pc, n_roots, chunk)
         for r in range(pods):
             pi = pis[:, :, r, :].reshape(g.part.n)[: g.part.n_orig]

@@ -1,0 +1,229 @@
+"""The plan → compile → run session API (repro.core.engine) and the
+decomposition registry (repro.core.decomp): parity with the one-shot
+``run_bfs`` across the full combo matrix, compile-once/ship-once
+guarantees, plan-validation error paths, and pod-batched multi-source
+runs in both decompositions."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import BFSConfig
+from repro.core import decomp, local_ops
+from repro.core.bfs import run_bfs
+from repro.core.engine import BFSEngine, plan_bfs, plan_for_part
+from repro.core.partition import make_partition, make_partition_1d
+from repro.core.ref import bfs_depths, depths_from_parents, validate_parents
+from repro.graph.formats import build_blocked, build_blocked_1d
+from repro.graph.rmat import rmat_graph
+from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+
+
+@pytest.fixture(scope="module")
+def fixed_graph():
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    # with_col_ptr: the matrix includes the 1d/kernel/csr cell
+    return (e, build_blocked_1d(e, 1, align=32, cap_pad=32,
+                                with_col_ptr=True),
+            build_blocked(e, 1, 1, align=32, cap_pad=32))
+
+
+def _mesh_for(d, **kw):
+    return make_local_mesh_1d(1, **kw) if d == "1d" \
+        else make_local_mesh(1, 1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_decomp_registry():
+    assert decomp.registered_decompositions() == ("1d", "2d")
+    with pytest.raises(ValueError, match="no decomposition registered"):
+        decomp.get_decomposition("1.5d")
+    for name in decomp.registered_decompositions():
+        entry = decomp.get_decomposition(name)
+        assert entry.n_axes == len(entry.axis_sizes(
+            make_partition_1d(64, 1, align=32) if name == "1d"
+            else make_partition(64, 1, 1, align=32)))
+
+
+def test_unknown_decomposition_rejected_at_plan(fixed_graph):
+    e, g1, g2 = fixed_graph
+    with pytest.raises(ValueError, match="no decomposition registered"):
+        plan_bfs(g2, BFSConfig(decomposition="3d"), make_local_mesh(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Parity vs run_bfs across the full combo matrix
+# ---------------------------------------------------------------------------
+
+
+def test_engine_parity_matrix(fixed_graph):
+    """engine.run must return bit-identical parents AND counters to the
+    one-shot run_bfs in every (decomposition, local_mode, storage)
+    combo — the engine only changes WHEN compilation happens."""
+    e, g1, g2 = fixed_graph
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    for dc, lm, st_ in local_ops.registered_combos():
+        g = g1 if dc == "1d" else g2
+        mesh = _mesh_for(dc)
+        cfg = BFSConfig(decomposition=dc, storage=st_)
+        ref = run_bfs(g, root, cfg, mesh, local_mode=lm)
+        eng = plan_bfs(g, cfg, mesh, local_mode=lm).compile()
+        res = eng.run(root)
+        assert np.array_equal(res.parents, ref.parents), (dc, lm, st_)
+        assert res.n_levels == ref.n_levels, (dc, lm, st_)
+        assert res.counters == ref.counters, (dc, lm, st_)
+        assert np.array_equal(res.level_stats, ref.level_stats), (dc, lm, st_)
+
+
+# ---------------------------------------------------------------------------
+# Compile-once / ship-once
+# ---------------------------------------------------------------------------
+
+
+def test_run_many_compiles_once_ships_once(fixed_graph, monkeypatch):
+    """The acceptance bar: over >=4 roots, exactly one jit trace and one
+    graph shipment (one device_put per shipped key, all during
+    compile(), none during run)."""
+    e, g1, g2 = fixed_graph
+    roots = np.flatnonzero(e.out_degrees() > 0)[:4]
+    assert len(roots) >= 4
+    puts = []
+    real_put = jax.device_put
+    monkeypatch.setattr(jax, "device_put",
+                        lambda *a, **kw: puts.append(1) or real_put(*a, **kw))
+    plan = plan_bfs(g2, BFSConfig(), make_local_mesh(1, 1))
+    eng = plan.compile()
+    assert len(puts) == len(plan.keys)          # graph shipped exactly once
+    assert eng.trace_count == 1                 # one jit trace at compile()
+    ref = [run_bfs(g2, int(r), BFSConfig(), make_local_mesh(1, 1))
+           for r in roots]
+    n_puts_after_compile = len(puts)
+    results = eng.run_many(roots)
+    assert len(puts) == n_puts_after_compile    # no re-shipping per root
+    assert eng.trace_count == 1                 # no re-tracing per root
+    for got, want, r in zip(results, ref, roots):
+        assert np.array_equal(got.parents, want.parents), int(r)
+        assert got.counters == want.counters, int(r)
+        assert got.n_levels == want.n_levels, int(r)
+
+
+# ---------------------------------------------------------------------------
+# Plan-validation error paths
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rejects_mismatched_graph(fixed_graph):
+    e, g1, g2 = fixed_graph
+    with pytest.raises(TypeError, match="does not match"):
+        plan_bfs(g2, BFSConfig(decomposition="1d"), make_local_mesh_1d(1))
+    with pytest.raises(TypeError, match="does not match"):
+        plan_bfs(g1, BFSConfig(), make_local_mesh(1, 1))
+
+
+def test_plan_rejects_mismatched_partition():
+    part1 = make_partition_1d(256, 1, align=32)
+    with pytest.raises(TypeError, match="needs a Partition2D"):
+        plan_for_part(part1, BFSConfig(), make_local_mesh(1, 1), cap_seg=32)
+
+
+def test_plan_rejects_mesh_geometry_mismatch():
+    e = rmat_graph(8, edge_factor=8, seed=1)
+    g = build_blocked_1d(e, 2, align=32, cap_pad=32)   # 2 strips...
+    with pytest.raises(ValueError, match="mesh axis"):
+        plan_bfs(g, BFSConfig(decomposition="1d"),
+                 make_local_mesh_1d(1))                # ...1-device mesh
+    part = make_partition(256, 1, 1, align=32)
+    with pytest.raises(ValueError, match="mesh has no"):
+        plan_for_part(part, BFSConfig(), make_local_mesh(1, 1),
+                      cap_seg=32, row_axis="nope")
+
+
+def test_plan_rejects_missing_cap_seg():
+    part = make_partition(256, 1, 1, align=32)
+    with pytest.raises(ValueError, match="cap_seg"):
+        plan_for_part(part, BFSConfig(), make_local_mesh(1, 1))
+
+
+def test_plan_rejects_missing_kernel_arrays():
+    e = rmat_graph(8, edge_factor=8, seed=1)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)   # no col_ptr
+    with pytest.raises(ValueError, match="lacks arrays"):
+        plan_bfs(g, BFSConfig(decomposition="1d", storage="csr"),
+                 make_local_mesh_1d(1), local_mode="kernel")
+
+
+def test_engine_requires_concrete_graph():
+    part = make_partition(256, 1, 1, align=32)
+    plan = plan_for_part(part, BFSConfig(), make_local_mesh(1, 1), cap_seg=32)
+    with pytest.raises(ValueError, match="no graph attached"):
+        BFSEngine(plan)
+
+
+# ---------------------------------------------------------------------------
+# Pod-batched multi-source runs (both decompositions)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dc", ["1d", "2d"])
+def test_run_batch_valid_multisource(fixed_graph, dc):
+    """run_batch must produce valid trees with oracle depths from every
+    root, in the 1D decomposition as well as 2D (the pod axis batches
+    whole searches; pods=1 exercises the full program shape)."""
+    e, g1, g2 = fixed_graph
+    g = g1 if dc == "1d" else g2
+    roots = np.flatnonzero(e.out_degrees() > 0)[:4]
+    eng = plan_bfs(g, BFSConfig(decomposition=dc),
+                   _mesh_for(dc, pods=1)).compile()
+    batch = eng.run_batch(roots)
+    assert batch.parents.shape == (len(roots), e.n)
+    for i, r in enumerate(roots):
+        ok, msg = validate_parents(e.n, e.src, e.dst, int(r),
+                                   batch.parents[i])
+        assert ok, (dc, int(r), msg)
+        d = bfs_depths(e.n, e.src, e.dst, int(r))
+        assert np.array_equal(
+            depths_from_parents(e.n, batch.parents[i], int(r)), d), (dc, r)
+        assert batch.n_levels[i] >= d[d >= 0].max()
+    # batched program compiled once, cached for repeat calls
+    n_traces = eng.trace_count
+    eng.run_batch(roots)
+    assert eng.trace_count == n_traces
+
+
+def test_run_batch_errors(fixed_graph):
+    e, g1, g2 = fixed_graph
+    eng = plan_bfs(g2, BFSConfig(), make_local_mesh(1, 1)).compile()
+    with pytest.raises(ValueError, match="no 'pod' axis"):
+        eng.run_batch([0, 1])
+    eng_p = plan_bfs(g2, BFSConfig(), make_local_mesh(1, 1, pods=1)).compile()
+    with pytest.raises(ValueError, match="do not split evenly"):
+        eng_p.run_batch([])
+
+
+# ---------------------------------------------------------------------------
+# Compat wrappers still honour the registry
+# ---------------------------------------------------------------------------
+
+
+def test_make_bfs_fn_1d_overrides_decomposition():
+    """make_bfs_fn_1d must build the 1D program even when handed a cfg
+    whose decomposition field still says 2d (pre-engine behavior)."""
+    from repro.core.bfs import make_bfs_fn_1d
+    part = make_partition_1d(256, 1, align=32)
+    _, keys = make_bfs_fn_1d(make_local_mesh_1d(1), part,
+                             BFSConfig(decomposition="2d"))
+    assert "seg_ptr" not in keys          # 1D key set, not 2D
+
+
+def test_cfg_decomposition_read_directly(fixed_graph):
+    """BFSConfig declares the field; a cfg object lacking it is a bug,
+    not something the engine papers over with getattr defaults."""
+    e, g1, g2 = fixed_graph
+
+    class NotACfg:
+        storage = "csr"
+    with pytest.raises(AttributeError):
+        plan_bfs(g2, NotACfg(), make_local_mesh(1, 1))
