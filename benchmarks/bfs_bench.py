@@ -41,13 +41,16 @@ _PHASES = ("wire_transpose", "wire_expand", "wire_fold", "wire_rotate",
 
 
 def sweep_decompositions(scale: int, grid, n_devices: int = 16,
-                         roots: int = 4, **payload_kw) -> List[Dict]:
-    """Run the same R-MAT graph through both decompositions on the same
-    device count (1D uses p = pr*pc strips) and emit one CSV row per
-    decomposition with TEPS + per-phase wire counters — the measured
-    side of the paper's Eq. 2 comparison."""
+                         roots: int = 4, out_json: Optional[str] = None,
+                         **payload_kw) -> List[Dict]:
+    """Run the same R-MAT graph through all three decompositions on the
+    same device count (1d/1ds use p = pr*pc strips) and emit one CSV row
+    per decomposition with TEPS + per-phase wire counters — the measured
+    side of the paper's Eq. 2 comparison.  ``out_json`` additionally
+    dumps the rows plus the dense-vs-sparse expand-words crossover
+    artifact (``expand_words_artifact``) for CI."""
     out = []
-    for decomp in ("1d", "2d"):
+    for decomp in ("1d", "1ds", "2d"):
         res = run_worker({"scale": scale, "grid": list(grid),
                           "roots": roots, "decomposition": decomp,
                           **payload_kw}, n_devices=n_devices)
@@ -58,7 +61,49 @@ def sweep_decompositions(scale: int, grid, n_devices: int = 16,
              f"teps={res['teps']:.3e};"
              f"compile_s={res.get('compile_s', 0.0):.3f};{phases}")
         out.append(res)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"rows": out,
+                       "expand_words": expand_words_artifact(out)}, f,
+                      indent=2)
     return out
+
+
+def expand_words_artifact(rows) -> Dict:
+    """The dense-vs-sparse 1D expand comparison from a
+    ``sweep_decompositions`` run: per-level measured wire words for the
+    "1d" bitmap allgather and the "1ds" id exchange on the same graph,
+    the per-level dense closed form, and the crossover level — the first
+    level where the sparse exchange stops beating the bitmap (None if it
+    wins every level)."""
+    if _SRC not in sys.path:           # CLI runs without PYTHONPATH=src
+        sys.path.insert(0, _SRC)
+    from repro.core import comm_model
+    by = {r["decomposition"]: r for r in rows}
+    d1, ds = by.get("1d"), by.get("1ds")
+    if not (d1 and ds):
+        return {}
+    n_pad, p = ds["n_pad"], ds["p"]
+    dense_level = comm_model.expand_1d_level_words(n_pad, p)
+    sparse = ds.get("levels_wire_expand") or []
+    crossover = next((i for i, w in enumerate(sparse) if w >= dense_level),
+                     None)
+    return {
+        "n_pad": n_pad, "p": p, "cap_x": ds.get("cap_x"),
+        "dense_level_words_model": dense_level,
+        # live ids shipped per level (the modeled alltoallv volume); the
+        # static padded buckets cost sparse_padded_level_words_model a
+        # level whenever the sparse path runs
+        "sparse_padded_level_words_model":
+            comm_model.sparse_expand_padded_words(ds.get("cap_x") or 0, p),
+        "dense_levels_wire_expand": d1.get("levels_wire_expand"),
+        "sparse_levels_wire_expand": sparse,
+        "sparse_levels_n_f": ds.get("levels_n_f"),
+        "wire_expand_total_1d": (d1["counters"] or {}).get("wire_expand"),
+        "wire_expand_total_1ds": (ds["counters"] or {}).get("wire_expand"),
+        "topdown_1d_words_model": comm_model.topdown_1d_words(ds["m"], p),
+        "crossover_level": crossover,
+    }
 
 
 def sweep_local_formats(scale: int, grid, n_devices: int = 16,
@@ -121,7 +166,9 @@ def engine_timing_summary(rows) -> List[Dict]:
 
 def _main():
     """CLI for the CI bench smoke: tiny-scale sweep_local_formats on
-    forced host devices, CSV to stdout + JSON artifact."""
+    forced host devices, CSV to stdout + JSON artifacts; ``--decomp-out``
+    additionally runs the three-way decomposition sweep and writes the
+    dense-vs-sparse expand-words crossover artifact."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=8)
@@ -133,6 +180,10 @@ def _main():
     ap.add_argument("--timings-out", default=None,
                     help="write the compile-vs-traverse split per combo "
                          "(engine path) as a JSON artifact")
+    ap.add_argument("--decomp-out", default=None,
+                    help="also run the 1d/1ds/2d sweep_decompositions "
+                         "and write the dense-vs-sparse expand-words "
+                         "artifact to this path")
     a = ap.parse_args()
     pr, pc = map(int, a.grid.split("x"))
     print("name,us_per_call,derived")
@@ -142,6 +193,10 @@ def _main():
     if a.timings_out:
         with open(a.timings_out, "w") as f:
             json.dump(engine_timing_summary(rows), f, indent=2)
+    if a.decomp_out:
+        sweep_decompositions(a.scale, (pr, pc), n_devices=a.devices,
+                             roots=a.roots, out_json=a.decomp_out,
+                             validate=True)
 
 
 if __name__ == "__main__":

@@ -35,10 +35,10 @@ def main():
     rng = np.random.default_rng(0)
     roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
 
-    # a 1d run reuses the same grid spec as p = pr*pc strips so sweeps
+    # 1d/1ds runs reuse the same grid spec as p = pr*pc strips so sweeps
     # pair up on identical graphs
     local_mode = payload.get("local_mode", "dense")
-    if decomp == "1d":
+    if decomp in ("1d", "1ds"):
         # the uncompressed strip col_ptr is only materialized for the
         # kernel/csr comparison cell (O(n*p) host words by design)
         need_col_ptr = (local_mode == "kernel"
@@ -50,7 +50,8 @@ def main():
         g = build_blocked(edges, pr, pc, align=32, cap_pad=32)
         mesh = make_local_mesh(pr, pc)
     plan = plan_bfs(g, cfg, mesh, local_mode=local_mode,
-                    cap_f=payload.get("cap_f", 0))
+                    cap_f=payload.get("cap_f", 0),
+                    cap_x=payload.get("cap_x", 0))
     eng = plan.compile()                  # ship once + jit once
     # one untimed warmup execution: AOT compile never runs the program,
     # so first-dispatch/allocation overhead must not land on root 0
@@ -74,12 +75,19 @@ def main():
     # both graph formats share the storage_words(mode) accounting API
     mem = {"mem_csr": g.storage_words("csr"),
            "mem_dcsc": g.storage_words("dcsc")}
+    # per-level frontier sizes / modes / measured expand words from the
+    # last root's search (the dense-vs-sparse expand crossover artifact)
+    used = res.level_stats[:, 3] > 0
+    levels = {"levels_n_f": res.level_stats[used, 0].tolist(),
+              "levels_mode": res.level_stats[used, 2].tolist(),
+              "levels_wire_expand": res.level_stats[used, 4].tolist()}
     print(json.dumps({
         "hmean_s": hmean, "times": times, "m_input": edges.m_input,
-        "m": edges.m, "n": edges.n, "counters": counters,
-        "decomposition": decomp,
+        "m": edges.m, "n": edges.n, "n_pad": g.part.n, "p": g.part.p,
+        "cap_x": plan.statics.cap_x,
+        "counters": counters, "decomposition": decomp,
         "compile_s": eng.compile_s, "ship_s": eng.ship_s,
-        "teps": edges.m_input / hmean, **mem,
+        "teps": edges.m_input / hmean, **levels, **mem,
     }))
 
 

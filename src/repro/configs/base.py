@@ -211,8 +211,10 @@ class RecsysConfig:
 @dataclass(frozen=True)
 class BFSConfig:
     arch: str = "bfs-rmat"
-    # "2d" checkerboard (paper §4) | "1d" row strips (Alg. 1/2 baseline).
-    # 1D has no fold/transpose phases: storage/fold_mode only apply to 2D.
+    # "2d" checkerboard (paper §4) | "1d" row strips, dense bitmap
+    # allgather (Alg. 1/2 baseline) | "1ds" row strips, sparse
+    # owner-directed frontier exchange with bitmap fallback.
+    # 1D has no fold/transpose phases: fold_mode only applies to 2D.
     decomposition: str = "2d"
     storage: str = "csr"          # "csr" | "dcsc"
     # fold: "alltoall" (paper-faithful) | "reduce" (ring RS) |

@@ -38,3 +38,9 @@ CONFIG_1D_TOPDOWN = register(dataclasses.replace(
 # take the Pallas strip SpMSV; see core/local_ops.py)
 CONFIG_1D_DCSC = register(dataclasses.replace(
     CONFIG_1D, arch="bfs-rmat-1d-dcsc", storage="dcsc"))
+# 1D with the SPARSE owner-directed frontier exchange ("1ds",
+# core/steps_1d_sparse.py): capped frontier-id buckets broadcast per
+# level with a dense bitmap fallback — the Buluc & Madduri formulation
+# whose closed form is comm_model.topdown_1d_words
+CONFIG_1DS = register(dataclasses.replace(
+    CONFIG_1D, arch="bfs-rmat-1ds", decomposition="1ds"))

@@ -29,20 +29,21 @@ from repro.core.partition import Partition1D, Partition2D
 
 def make_bfs_fn_1d(mesh, part: Partition1D, cfg: BFSConfig,
                    axis: str = "data", local_mode: str = "dense",
-                   maxdeg: int = 0, cap_f: int = 0):
+                   maxdeg: int = 0, cap_f: int = 0, cap_x: int = 0):
     """Build the jitted whole-search 1D BFS function.  Returns
     fn(graph_arrays_dict, root) -> (pi, level, ctr, stats)."""
-    if cfg.decomposition != "1d":
+    if cfg.decomposition not in ("1d", "1ds"):
         cfg = dataclasses.replace(cfg, decomposition="1d")
     plan = plan_for_part(part, cfg, mesh, row_axis=axis,
-                         local_mode=local_mode, maxdeg=maxdeg, cap_f=cap_f)
+                         local_mode=local_mode, maxdeg=maxdeg, cap_f=cap_f,
+                         cap_x=cap_x)
     return plan.build_fn(), plan.keys
 
 
 def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
                 row_axis: str = "data", col_axis: str = "model",
                 local_mode: str = "dense", n_real_edges: float = 0.0,
-                maxdeg: int = 0, cap_f: int = 0):
+                maxdeg: int = 0, cap_f: int = 0, cap_x: int = 0):
     """Build the jitted whole-search BFS function for a given mesh/graph
     geometry, dispatching on ``cfg.decomposition`` through the
     decomposition registry.  Returns fn(graph_arrays_dict, root) ->
@@ -50,7 +51,7 @@ def make_bfs_fn(mesh, part, cfg: BFSConfig, cap_seg: int = 0,
     plan = plan_for_part(part, cfg, mesh, row_axis=row_axis,
                          col_axis=col_axis, local_mode=local_mode,
                          cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
-                         n_real_edges=n_real_edges)
+                         cap_x=cap_x, n_real_edges=n_real_edges)
     return plan.build_fn(), plan.keys
 
 
@@ -59,7 +60,7 @@ def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
                           pod_axis: str = "pod", row_axis: str = "data",
                           col_axis: str = "model", maxdeg: int = 0,
                           local_mode: str = "dense", cap_f: int = 0,
-                          n_real_edges: float = 0.0):
+                          cap_x: int = 0, n_real_edges: float = 0.0):
     """Batched independent BFS roots sharded over the pod axis — the
     multi-pod Graph500 pattern (16-64 roots per benchmark run, pods are
     embarrassingly parallel across roots; graph blocks replicated across
@@ -71,19 +72,21 @@ def make_multiroot_bfs_fn(mesh, part: Partition2D, cfg: BFSConfig,
     plan = plan_for_part(part, cfg, mesh, row_axis=row_axis,
                          col_axis=col_axis, local_mode=local_mode,
                          cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
-                         n_real_edges=n_real_edges)
+                         cap_x=cap_x, n_real_edges=n_real_edges)
     return plan.build_batch_fn(pod_axis), plan.keys
 
 
 def run_bfs(graph, root: int, cfg: BFSConfig, mesh,
             row_axis: str = "data", col_axis: str = "model",
-            local_mode: str = "dense", cap_f: int = 0) -> BFSResult:
+            local_mode: str = "dense", cap_f: int = 0,
+            cap_x: int = 0) -> BFSResult:
     """One-shot convenience wrapper: plan, compile, run a single root.
 
-    ``graph`` is a BlockedGraph (2D) or Blocked1DGraph (1D); which one
-    must match ``cfg.decomposition``.  Ships + compiles on EVERY call —
-    use ``plan_bfs(graph, cfg, mesh).compile()`` and run the engine when
-    traversing from more than one root."""
+    ``graph`` is a BlockedGraph (2D) or Blocked1DGraph (1D/1Ds); which
+    one must match ``cfg.decomposition``.  Ships + compiles on EVERY
+    call — use ``plan_bfs(graph, cfg, mesh).compile()`` and run the
+    engine when traversing from more than one root.  ``cap_x`` overrides
+    the planned "1ds" sparse-exchange bucket capacity."""
     plan = plan_bfs(graph, cfg, mesh, row_axis=row_axis, col_axis=col_axis,
-                    local_mode=local_mode, cap_f=cap_f)
+                    local_mode=local_mode, cap_f=cap_f, cap_x=cap_x)
     return plan.compile().run(root)

@@ -31,20 +31,82 @@ def ratio_eq2(k: float, pc: int, s_b: float = 4.0) -> float:
 # ---------------------------------------------------------------------------
 
 
+def expand_1d_level_words(n, p):
+    """Per-level wire of the DENSE 1D frontier exchange: one n-bit bitmap
+    per level, every chunk replicated to the other p-1 processors ->
+    (p-1) * n/64 global 64-bit words.  Pure arithmetic, so it is the ONE
+    place the word-size conversion lives: the live ``wire_expand``
+    counter (core/steps_1d.py, traced values) and the host-side closed
+    forms both call it and cannot drift."""
+    return (p - 1) * (n / 64.0)
+
+
 def expand_1d_words(n: int, p: int, n_levels: int) -> float:
-    """Exact wire volume of our allgather-based 1D implementation: each
-    level moves one dense n-bit frontier bitmap, every chunk replicated
-    to the other p-1 processors -> (p-1) * n/64 global 64-bit words per
-    level.  This is the closed form the 1D ``wire_expand`` counter must
-    reproduce (there is no fold/transpose/rotate wire in 1D)."""
-    return float(n_levels) * (p - 1) * n / 64.0
+    """Exact wire volume of the allgather-based ``"1d"`` implementation
+    over a whole search: ``n_levels`` dense bitmap exchanges.  This is
+    the closed form the 1D ``wire_expand`` counter must reproduce (there
+    is no fold/transpose/rotate wire in 1D)."""
+    return float(n_levels) * expand_1d_level_words(n, p)
+
+
+def sparse_expand_1d_words(n_f, p):
+    """Per-level wire of the SPARSE owner-directed 1D frontier exchange
+    (``"1ds"``): each of the ``n_f`` global frontier ids is shipped by
+    its owner to the other p-1 processors, 1 id = 1 word.  Works on
+    traced values (the live counter) and on host floats (the model)."""
+    return n_f * (p - 1.0)
+
+
+def hybrid_expand_1d_level_words(n_f_local_max: float, n_f: float, n: int,
+                                 p: int, cap_x: int) -> float:
+    """Overflow model for one ``"1ds"`` level: the sparse exchange ships
+    ids while every per-processor bucket fits ``cap_x``; any overflow
+    falls back to the dense bitmap for that level (the per-level hybrid,
+    mirroring the direction-optimizing switch)."""
+    if n_f_local_max > cap_x:
+        return expand_1d_level_words(n, p)
+    return sparse_expand_1d_words(n_f, p)
+
+
+def sparse_expand_padded_words(cap_x: int, p) -> float:
+    """Physical buffer volume of the STATIC-SHAPE sparse exchange: the
+    tiled allgather always moves the full cap_x-slot bucket — sentinels
+    included — from each of the p owners to its p-1 peers, whatever the
+    live frontier size.  Reported in the same 1-id-=-1-word units as
+    ``sparse_expand_1d_words`` so the two are directly comparable; note
+    ids are i32 on the wire, so at the planned crossover capacity
+    (cap_x ~ n/(64p)) the padded buckets cost the same BYTES as the
+    n-bit dense bitmap — the id counter measures the alltoallv volume
+    of the sparse formulation the exchange models, not the padding."""
+    return float(p) * (p - 1.0) * cap_x
+
+
+def plan_cap_x(n: int, p: int, m: int = 0, align: int = 32) -> int:
+    """Plan the ``"1ds"`` per-destination send-bucket capacity from the
+    graph degree stats.  The dense bitmap costs (p-1)*n/64 words a level
+    while the sparse exchange costs n_f*(p-1), so sparse only wins while
+    the global frontier is under n/64 ids — n/(64p) per processor.  The
+    bucket cap bounds the PER-PROCESSOR frontier, so the degree-stat
+    headroom is the expected per-bucket level-1 load, (2m/n)/p on a
+    symmetrized graph (a whole level-1 frontier spreads over all p
+    owners); the ``align`` floor absorbs skew.  Capping at the
+    crossover keeps the planned hybrid within bucket granularity of the
+    per-level optimum: a fitting level ships at most p*cap_x*(p-1)
+    words — ~the dense bitmap volume once n >= 64*align*p — and levels
+    the sparse path cannot win overflow to the bitmap."""
+    chunk = max(n // max(p, 1), 1)
+    d_avg = int(2.0 * m / n) if (m and n) else 0
+    cap = max(n // (64 * max(p, 1)), d_avg // max(p, 1) + 1, align)
+    cap = ((cap + align - 1) // align) * align
+    return min(cap, ((chunk + align - 1) // align) * align)
 
 
 def topdown_1d_words(m: int, p: int) -> float:
     """Classic sparse 1D top-down volume (Buluc & Madduri): every
     cross-processor edge endpoint is shipped once as a vertex id, and a
     random partition leaves a (p-1)/p fraction of the 2m directed
-    endpoints remote."""
+    endpoints remote.  The measured counterpart is the ``"1ds"``
+    ``wire_expand`` counter with overflow disabled (cap_x = chunk)."""
     return 2.0 * m * (p - 1) / p
 
 

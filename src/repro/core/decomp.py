@@ -21,15 +21,23 @@ plus in/out PartitionSpec helpers (``graph_spec`` / ``out_specs`` /
 ``batch_out_specs``) shared by the single-root and pod-batched
 programs.  Registered entries:
 
-  "2d" — the paper's checkerboard (§4.4): axes (row, col) = (pr, pc),
-         expand = transpose + allgather, fold along the processor row,
-         systolic bottom-up rotation.
-  "1d" — row strips (Alg. 1/2 baseline): one axis of size p, expand =
-         one allgather, no fold/transpose/rotation.
+  "2d"  — the paper's checkerboard (§4.4): axes (row, col) = (pr, pc),
+          expand = transpose + allgather, fold along the processor row,
+          systolic bottom-up rotation.
+  "1d"  — row strips (Alg. 1/2 baseline): one axis of size p, expand =
+          one dense-bitmap allgather, no fold/transpose/rotation.
+  "1ds" — row strips with the SPARSE owner-directed frontier exchange
+          (Buluc & Madduri's formulation): expand = fixed-capacity id
+          buckets (``PlanStatics.cap_x``) broadcast with one tiled
+          allgather, falling back to the dense bitmap when a bucket
+          overflows (core/steps_1d_sparse.py).  Same partition/graph/
+          LocalOps as "1d" — the registry's first entry added without
+          engine edits.
 
 A future 1D-column or 1.5D decomposition is a new entry here (its own
 steps module + LevelArgs + body), not an edit to the engine — see the
-"adding a decomposition" guide in README.md.
+"adding a decomposition" guide in README.md (rewritten against the
+actual "1ds" diff).
 
 The decomposition-agnostic pieces also live here: ``_search_loop`` (the
 level loop + Beamer direction heuristics + COUNTER_KEYS accounting
@@ -50,6 +58,8 @@ from repro.core.steps import (COUNTER_KEYS, LevelArgs, bottomup_level,
                               topdown_level, zero_counters)
 from repro.core.steps_1d import (LevelArgs1D, bottomup_level_1d,
                                  topdown_level_1d)
+from repro.core.steps_1d_sparse import (LevelArgs1DS, bottomup_level_1ds,
+                                        topdown_level_1ds)
 from repro.graph.formats import Blocked1DGraph, BlockedGraph
 
 MAX_LEVELS = 64
@@ -62,6 +72,7 @@ class PlanStatics:
     cap_seg: int = 0          # 2D bottom-up sub-step edge window
     maxdeg: int = 0           # kernel mode: max column-segment length
     cap_f: int = 0            # kernel mode: frontier capacity (0 = nc)
+    cap_x: int = 0            # 1ds sparse exchange: ids per send bucket
     n_real_edges: float = 0.0  # unpadded edge count (TEPS/metadata)
 
 
@@ -87,8 +98,9 @@ class Decomposition:
         return (P(*axes), P(), {k: P() for k in COUNTER_KEYS}, P())
 
     def batch_out_specs(self, axes: Tuple[str, ...], pod_axis: str):
-        """(parents-per-root, levels) specs for the pod-batched program."""
-        return (P(*(axes + (pod_axis, None))), P(pod_axis))
+        """(parents-per-root, levels, level_stats-per-root) specs for the
+        pod-batched program."""
+        return (P(*(axes + (pod_axis, None))), P(pod_axis), P(pod_axis))
 
 
 _REGISTRY: Dict[str, Decomposition] = {}
@@ -118,34 +130,54 @@ def registered_decompositions() -> Tuple[str, ...]:
 
 
 def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
-                 sync, td_level, bu_level):
+                 sync, td_level, bu_level, sync_modes: bool = False):
     """Frontier-size / edge-mass direction heuristics, per-level stats,
     counter accumulation.  ``td_level`` / ``bu_level`` are
     (pi, front) -> (pi, front, ctr) step closures over the local graph
-    ``g`` (already squeezed)."""
+    ``g`` (already squeezed).
+
+    The loop state carries TWO frontier sizes: the per-slice ``n_f``
+    (this search's own frontier — what the direction heuristics and the
+    level stats must read) and the cross-slice ``n_sync`` (the pmax over
+    the sync axes that keeps pod-batched searches in lockstep — what the
+    loop predicate reads).  Conflating them made every batched search
+    switch modes on the LARGEST pod's frontier instead of its own.
+
+    ``sync_modes``: a step body whose collectives span the WHOLE mesh
+    (2D: the ppermute transpose / ring fold / systolic rotation
+    rendezvous with every device) cannot let pod slices take different
+    td/bu branches — divergent slices would wait on different collective
+    ops forever.  Such entries set sync_modes=True and the *decision* is
+    made uniform over ``sync``: any slice wanting bottom-up switches all
+    of them, and top-down resumes only when every slice wants it.
+    Entries whose collectives are group-local per slice (1d/1ds:
+    all_gather / all_to_all along the strip axis only) keep sync_modes
+    False and genuinely switch per slice."""
     pi0 = jnp.where(gidx == root, root, jnp.int32(-1))
     front0 = gidx == root
-    stats0 = jnp.zeros((MAX_LEVELS, 4), jnp.float32)
+    stats0 = jnp.zeros((MAX_LEVELS, 5), jnp.float32)
 
     def cond(st):
-        pi, front, mode, level, n_f, ctr, stats = st
-        return (level < MAX_LEVELS) & (n_f > 0)
+        pi, front, mode, level, n_f, n_sync, ctr, stats = st
+        return (level < MAX_LEVELS) & (n_sync > 0)
 
     def body(st):
-        pi, front, mode, level, n_f, ctr, stats = st
+        pi, front, mode, level, n_f, n_sync, ctr, stats = st
         m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
                                dtype=jnp.float32), axes)
         m_u = lax.psum(jnp.sum(jnp.where(pi == -1, g["deg_A"], 0),
                                dtype=jnp.float32), axes)
         if cfg.direction_optimizing:
+            # per-slice n_f: each batched search switches on its OWN
+            # frontier size, never a lockstep partner's
             go_bu = (mode == 0) & (m_f > m_u / cfg.alpha)
             go_td = (mode == 1) & (n_f < n_total / cfg.beta)
+            if sync_modes and sync != axes:
+                go_bu = lax.pmax(go_bu.astype(jnp.int32), sync) > 0
+                go_td = lax.pmin(go_td.astype(jnp.int32), sync) > 0
             new_mode = jnp.where(go_bu, 1, jnp.where(go_td, 0, mode))
         else:
             new_mode = mode
-        stats = stats.at[level].set(
-            jnp.stack([n_f, m_f, new_mode.astype(jnp.float32),
-                       jnp.float32(1)]))
 
         pi2, front2, c2 = lax.cond(
             new_mode == 1,
@@ -153,15 +185,21 @@ def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
             lambda pf: td_level(pf[0], pf[1]),
             (pi, front))
         ctr = {k: ctr[k] + c2[k] for k in ctr}
+        # stats row: n_f, m_f, mode, used, measured expand words this
+        # level (the dense-vs-sparse crossover is read off column 4)
+        stats = stats.at[level].set(
+            jnp.stack([n_f, m_f, new_mode.astype(jnp.float32),
+                       jnp.float32(1), c2["wire_expand"]]))
         n_f2 = lax.psum(jnp.sum(front2, dtype=jnp.float32), axes)
-        # cond feeds on the cross-slice max so batched searches stay in
-        # lockstep (heuristics above use the per-slice n_f)
-        n_sync = lax.pmax(n_f2, sync) if sync != axes else n_f2
-        return (pi2, front2, new_mode, level + 1, n_sync, ctr, stats)
+        # the predicate feeds on the cross-slice max so batched searches
+        # stay in lockstep; heuristics keep the per-slice n_f2
+        n_sync2 = lax.pmax(n_f2, sync) if sync != axes else n_f2
+        return (pi2, front2, new_mode, level + 1, n_f2, n_sync2, ctr, stats)
 
     st = (pi0, front0, jnp.int32(0), jnp.int32(0), jnp.float32(1.0),
-          zero_counters(), stats0)
-    pi, front, mode, level, n_f, ctr, stats = lax.while_loop(cond, body, st)
+          jnp.float32(1.0), zero_counters(), stats0)
+    pi, front, mode, level, n_f, n_sync, ctr, stats = lax.while_loop(
+        cond, body, st)
     return pi, level, ctr, stats
 
 
@@ -187,7 +225,10 @@ def _bfs_body_2d(g, root, *, part: Partition2D, args: LevelArgs,
     pi, level, ctr, stats = _search_loop(
         g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
         td_level=lambda pi, f: topdown_level(g, pi, f, args),
-        bu_level=lambda pi, f: bottomup_level(g, pi, f, args))
+        bu_level=lambda pi, f: bottomup_level(g, pi, f, args),
+        # 2D steps ppermute (transpose / ring fold / rotation): the
+        # whole mesh must take one td/bu branch per level
+        sync_modes=True)
     return pi[None, None], level, ctr, stats
 
 
@@ -219,24 +260,37 @@ register_decomposition(Decomposition(
 
 
 # ---------------------------------------------------------------------------
-# 1D row-strip entry
+# 1D row-strip entries ("1d" dense expand, "1ds" sparse expand)
 # ---------------------------------------------------------------------------
 
 
-def _bfs_body_1d(g, root, *, part: Partition1D, args: LevelArgs1D,
-                 cfg: BFSConfig, sync_axis: Optional[str] = None):
-    """1D row-decomposition whole-search body over the single mesh axis."""
-    axes = (args.axis,)
-    sync = axes + ((sync_axis,) if sync_axis else ())
-    i = lax.axis_index(args.axis)
-    g = {k: v[0] for k, v in g.items()}
+def _make_strip_body(td_step, bu_step):
+    """Whole-search body over a single strip axis, shared by every 1D
+    entry: squeeze the strip arrays, build global vertex ids, run the
+    shared search loop with the given per-level step closures.  A new
+    strip-family decomposition supplies its two steps here instead of
+    copy-pasting the body (their collectives are group-local along the
+    strip axis, so per-slice direction switching is safe —
+    sync_modes stays False)."""
 
-    gidx = (i * part.chunk + jnp.arange(part.chunk)).astype(jnp.int32)
-    pi, level, ctr, stats = _search_loop(
-        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
-        td_level=lambda pi, f: topdown_level_1d(g, pi, f, args),
-        bu_level=lambda pi, f: bottomup_level_1d(g, pi, f, args))
-    return pi[None], level, ctr, stats
+    def body(g, root, *, part: Partition1D, args, cfg: BFSConfig,
+             sync_axis: Optional[str] = None):
+        axes = (args.axis,)
+        sync = axes + ((sync_axis,) if sync_axis else ())
+        i = lax.axis_index(args.axis)
+        g = {k: v[0] for k, v in g.items()}
+
+        gidx = (i * part.chunk + jnp.arange(part.chunk)).astype(jnp.int32)
+        pi, level, ctr, stats = _search_loop(
+            g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
+            td_level=lambda pi, f: td_step(g, pi, f, args),
+            bu_level=lambda pi, f: bu_step(g, pi, f, args))
+        return pi[None], level, ctr, stats
+
+    return body
+
+
+_bfs_body_1d = _make_strip_body(topdown_level_1d, bottomup_level_1d)
 
 
 def _make_args_1d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs1D:
@@ -251,3 +305,40 @@ register_decomposition(Decomposition(
     n_axes=1, axis_sizes=lambda part: (part.p,),
     make_level_args=_make_args_1d, body=_bfs_body_1d,
     validate=lambda part, statics: None))
+
+
+# ---------------------------------------------------------------------------
+# 1D sparse-exchange entry ("1ds"): same strips, owner-directed expand
+# ---------------------------------------------------------------------------
+
+_bfs_body_1ds = _make_strip_body(topdown_level_1ds, bottomup_level_1ds)
+
+
+def _make_args_1ds(part, cfg, ops, axes,
+                   statics: PlanStatics) -> LevelArgs1DS:
+    return LevelArgs1DS(part=part, axis=axes[0], cap_x=statics.cap_x,
+                        use_edge_dst=cfg.use_edge_dst,
+                        local_mode=ops.local_mode, storage=cfg.storage,
+                        cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops)
+
+
+def _validate_1ds(part, statics: PlanStatics) -> None:
+    if statics.cap_x <= 0:
+        # zero-capacity buckets would force the dense fallback on every
+        # level — the caller asked for the sparse exchange and got "1d"
+        raise ValueError(
+            "1ds decomposition needs cap_x > 0 (plan_bfs derives it from "
+            "the graph via comm_model.plan_cap_x; graph-less plans must "
+            "pass cap_x explicitly)")
+    if statics.cap_x > part.chunk:
+        raise ValueError(
+            f"cap_x={statics.cap_x} exceeds the owned chunk "
+            f"({part.chunk}) — a bucket can never hold more frontier "
+            f"ids than a processor owns")
+
+
+register_decomposition(Decomposition(
+    name="1ds", partition_cls=Partition1D, graph_cls=Blocked1DGraph,
+    n_axes=1, axis_sizes=lambda part: (part.p,),
+    make_level_args=_make_args_1ds, body=_bfs_body_1ds,
+    validate=_validate_1ds))

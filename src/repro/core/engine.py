@@ -45,6 +45,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import BFSConfig
+from repro.core import comm_model
 from repro.core.compat import shard_map
 from repro.core.decomp import (Decomposition, PlanStatics,
                                get_decomposition)
@@ -56,17 +57,23 @@ class BFSResult:
     parents: np.ndarray          # (n_orig,)
     n_levels: int
     counters: Dict[str, float]   # whole-search totals (paper 64-bit words)
-    level_stats: np.ndarray      # (MAX_LEVELS, 4): n_f, m_f, mode, used
+    level_stats: np.ndarray      # (MAX_LEVELS, 5): n_f, m_f, mode, used,
+    #                              measured expand words that level
 
 
 @dataclass
 class BFSBatchResult:
     """Pod-batched multi-source searches (counters are not accumulated
     per root in the batched program; use ``run``/``run_many`` for the
-    Eq. 2 accounting)."""
+    Eq. 2 accounting).  ``level_stats`` carries each root's OWN per-level
+    frontier sizes and direction decisions — batched searches share a
+    lockstep trip count, not frontier sizes.  Direction switching is per
+    slice for entries with group-local collectives (1d/1ds); the 2d
+    entry syncs the decision across pods (see decomp._search_loop)."""
     roots: np.ndarray            # (n_roots,)
     parents: np.ndarray          # (n_roots, n_orig)
     n_levels: np.ndarray         # (n_roots,)
+    level_stats: np.ndarray      # (n_roots, MAX_LEVELS, 5), per BFSResult
 
 
 # ---------------------------------------------------------------------------
@@ -147,10 +154,11 @@ class BFSPlan:
             # roots: (n_roots_local,) — scan full searches over local roots
             def one(carry, root):
                 pi, level, ctr, stats = body1(g, root)
-                return carry, (pi.reshape(pi.shape[-1]), level)
+                return carry, (pi.reshape(pi.shape[-1]), level, stats)
 
-            _, (pis, levels) = lax.scan(one, jnp.int32(0), roots.reshape(-1))
-            return pis.reshape((1,) * n_axes + pis.shape), levels
+            _, (pis, levels, stats) = lax.scan(one, jnp.int32(0),
+                                               roots.reshape(-1))
+            return pis.reshape((1,) * n_axes + pis.shape), levels, stats
 
         gspec = {k: self.entry.graph_spec(self.axes) for k in self.keys}
         mapped = shard_map(
@@ -171,7 +179,7 @@ class BFSPlan:
 def plan_for_part(part, cfg: BFSConfig, mesh, *,
                   row_axis: str = "data", col_axis: str = "model",
                   local_mode: str = "dense", cap_seg: int = 0,
-                  maxdeg: int = 0, cap_f: int = 0,
+                  maxdeg: int = 0, cap_f: int = 0, cap_x: int = 0,
                   n_real_edges: float = 0.0) -> BFSPlan:
     """A graph-less plan from an explicit partition + static capacities
     (abstract lowering, compat builders).  Performs every validation
@@ -194,7 +202,7 @@ def plan_for_part(part, cfg: BFSConfig, mesh, *,
                 f"{tuple(entry.axis_sizes(part))})")
     ops = get_local_ops(cfg.decomposition, local_mode, cfg.storage)
     statics = PlanStatics(cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
-                          n_real_edges=n_real_edges)
+                          cap_x=cap_x, n_real_edges=n_real_edges)
     entry.validate(part, statics)
     return BFSPlan(part=part, cfg=cfg, mesh=mesh, entry=entry, ops=ops,
                    axes=axes, statics=statics)
@@ -202,22 +210,29 @@ def plan_for_part(part, cfg: BFSConfig, mesh, *,
 
 def plan_bfs(graph, cfg: BFSConfig, mesh, *,
              row_axis: str = "data", col_axis: str = "model",
-             local_mode: str = "dense", cap_f: int = 0) -> BFSPlan:
+             local_mode: str = "dense", cap_f: int = 0,
+             cap_x: int = 0) -> BFSPlan:
     """Plan a traversal session over a concrete blocked graph.
 
     Resolves the decomposition + LocalOps entries, pulls the static
     scalars (cap_seg, maxdeg_col, n_real_edges) from the graph, and
     validates graph/partition/mesh/config coherence — including that
     the graph actually carries every array the chosen local format
-    ships."""
+    ships.  ``cap_x`` (the "1ds" sparse-exchange bucket capacity) is
+    planned from the graph degree stats when not given —
+    ``comm_model.plan_cap_x`` caps the buckets at the dense/sparse
+    crossover so overflowing levels fall back to the bitmap."""
     entry = get_decomposition(cfg.decomposition)
     if not isinstance(graph, entry.graph_cls):
         raise TypeError(
             f"cfg.decomposition={cfg.decomposition!r} does not match "
             f"graph type {type(graph).__name__}")
+    part = graph.part
+    if cap_x <= 0:
+        cap_x = comm_model.plan_cap_x(part.n, part.p, int(graph.m))
     plan = plan_for_part(
         graph.part, cfg, mesh, row_axis=row_axis, col_axis=col_axis,
-        local_mode=local_mode, cap_f=cap_f,
+        local_mode=local_mode, cap_f=cap_f, cap_x=cap_x,
         cap_seg=getattr(graph, "cap_seg", 0), maxdeg=graph.maxdeg_col,
         n_real_edges=float(graph.m))
     arrays = graph.device_arrays()
@@ -277,13 +292,28 @@ class BFSEngine:
     def _count_trace(self):
         self.trace_count += 1
 
+    def _check_root(self, root) -> int:
+        """Graphs are padded up to p*chunk vertices; a root in the padded
+        ghost range has no edges, so the device program would silently
+        return an all-empty parents array.  Validate at the engine
+        boundary instead."""
+        part = self.plan.part
+        root = int(root)
+        if not 0 <= root < part.n_orig:
+            raise ValueError(
+                f"root {root} out of range [0, {part.n_orig}): the graph "
+                f"has {part.n_orig} vertices (padded to {part.n} — "
+                f"traversing from a padded ghost vertex would return an "
+                f"empty tree)")
+        return root
+
     # ---- single-root ------------------------------------------------------
 
     def search(self, root: int):
         """Device-level search: (pi, level, ctr, stats) as device arrays,
         no host transfer.  Benchmark loops time this (+ a block on pi)
         so per-root numbers measure traversal, not result conversion."""
-        return self._exec(self._gdev, jnp.int32(root))
+        return self._exec(self._gdev, jnp.int32(self._check_root(root)))
 
     def to_result(self, out) -> BFSResult:
         """Convert a ``search`` output to the layout-independent
@@ -327,6 +357,8 @@ class BFSEngine:
         if roots.size == 0 or roots.size % pods:
             raise ValueError(f"{roots.size} roots do not split evenly over "
                              f"{pods} pods")
+        for r in roots:
+            self._check_root(r)
         rdev = jax.device_put(roots, NamedSharding(mesh, P(pod_axis)))
         key = (pod_axis, roots.size // pods)
         if key not in self._batch_cache:
@@ -335,7 +367,7 @@ class BFSEngine:
             t0 = time.perf_counter()
             self._batch_cache[key] = fn.lower(self._gdev, rdev).compile()
             self.batch_compile_s += time.perf_counter() - t0
-        pis, levels = self._batch_cache[key](self._gdev, rdev)
+        pis, levels, stats = self._batch_cache[key](self._gdev, rdev)
         part, n_axes = self.plan.part, self.plan.entry.n_axes
         # (*block_dims, n_roots, chunk) -> (n_roots, n) in layout A
         pis = np.moveaxis(np.asarray(pis), n_axes, 0)
@@ -344,4 +376,5 @@ class BFSEngine:
             roots=roots.astype(np.int64),
             parents=pis.astype(np.int64),
             n_levels=np.asarray(levels).astype(np.int64),
+            level_stats=np.asarray(stats),
         )

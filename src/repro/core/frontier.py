@@ -35,6 +35,26 @@ def test_bits(words: jax.Array, idx: jax.Array) -> jax.Array:
     return ((w >> (idx.astype(jnp.uint32) & jnp.uint32(31))) & 1).astype(bool)
 
 
+def pack_ids(mask: jax.Array, cap: int, offset, sentinel) -> jax.Array:
+    """Sparse frontier compaction: the global ids of the set bits of a
+    local (chunk,) bool mask, as a fixed-capacity (cap,) i32 buffer.
+    Unused slots (and every slot past ``cap``, if the mask has more than
+    ``cap`` bits — callers must detect that overflow themselves) hold
+    ``sentinel``; set bits beyond ``cap`` are silently dropped, which is
+    why the 1ds exchange guards this with a dense-bitmap fallback."""
+    chunk = mask.shape[0]
+    off = jnp.where(mask, size=cap, fill_value=chunk)[0]
+    return jnp.where(off < chunk, offset + off, sentinel).astype(jnp.int32)
+
+
+def unpack_ids(ids: jax.Array, n: int) -> jax.Array:
+    """Scatter sparse global ids back into a packed n-bit bitmap
+    (uint32 words).  Out-of-range ids — the ``pack_ids`` sentinel — are
+    dropped."""
+    mask = jnp.zeros((n,), bool).at[ids].set(True, mode="drop")
+    return pack_bits(mask)
+
+
 def transpose_vector(x: jax.Array, perm: Sequence[Tuple[int, int]],
                      axes: Tuple[str, str]) -> jax.Array:
     """The paper's TransposeVector: one collective-permute over the 2D grid

@@ -20,10 +20,14 @@ time and threads it through LevelArgs via the Decomposition entry's
 ``make_level_args`` (``core/decomp.py``); the step modules just call
 the closures.  Registered combos (Fig. 6 grid):
 
-  2d x {dense, kernel} x {csr, dcsc}   (dense ignores pointer storage)
-  1d x {dense, kernel} x {csr, dcsc}   (kernel/dcsc = the Pallas strip
+  2d  x {dense, kernel} x {csr, dcsc}  (dense ignores pointer storage)
+  1d  x {dense, kernel} x {csr, dcsc}  (kernel/dcsc = the Pallas strip
                                         SpMSV over doubly compressed
                                         global source columns)
+  1ds x {dense, kernel} x {csr, dcsc}  (mirrors the 1d entries: the
+                                        sparse-exchange decomposition
+                                        changes the expand collective,
+                                        not local discovery)
 
 Closure signatures (all arrays squeezed to the local block/strip):
 
@@ -40,6 +44,7 @@ LevelArgs1D NamedTuple (cap_f, maxdeg statics).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Callable, Dict, Tuple
 
@@ -220,3 +225,10 @@ register_local_ops(LocalOps(
     decomposition="1d", local_mode="kernel", storage="dcsc",
     keys=_KERNEL_DCSC_KEYS_1D, topdown=_td_strip_dcsc, bottomup=_bu_kernel,
     storage_words=_words("dcsc")))
+
+# "1ds" (sparse-exchange 1D, core/steps_1d_sparse.py) traverses the same
+# row strips with the same local kernels — only the expand collective
+# differs — so its LocalOps entries mirror "1d" exactly.
+for _combo in [k for k in sorted(_REGISTRY) if k[0] == "1d"]:
+    register_local_ops(dataclasses.replace(_REGISTRY[_combo],
+                                           decomposition="1ds"))

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import comm_model
 from repro.core.frontier import INT_INF, pack_bits, unpack_bits
 from repro.core.steps import zero_counters
 
@@ -68,9 +69,9 @@ def expand_frontier_1d(front: jax.Array, axis: str):
     words = pack_bits(front)                         # (chunk//32,) u32
     gathered = lax.all_gather(words, axis, tiled=True)
     p = lax.psum(1, axis)   # static axis size (lax.axis_size needs newer jax)
-    # each of the p chunks is replicated to the other p-1 processors;
-    # u32 word = half a 64-bit paper word
-    wire = jnp.float32(words.size) * 0.5 * (p - 1) * p
+    # shared closed form (word-size conversion lives in comm_model, so
+    # the measured counter and the model cannot drift): n = chunk * p
+    wire = jnp.float32(comm_model.expand_1d_level_words(words.size * 32 * p, p))
     return gathered, wire
 
 
@@ -116,7 +117,8 @@ def bottomup_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
 
     f_words, wire = expand_frontier_1d(front, args.axis)
     ctr["wire_expand"] = wire
-    ctr["use_expand"] = jnp.float32(part.n / 64.0) * (part.p - 1)
+    ctr["use_expand"] = jnp.float32(
+        comm_model.expand_1d_level_words(part.n, part.p))
 
     cvec = (pi != -1).astype(jnp.int32)
     ve = g["edge_dst"] if args.use_edge_dst and "edge_dst" in g else None

@@ -1,0 +1,160 @@
+"""Per-level BFS steps for the sparse-exchange 1D decomposition ("1ds"):
+the paper's Alg. 1/2 baseline with the frontier exchanged as
+owner-directed sparse vertex ids instead of a dense n-bit bitmap.
+
+The dense ``"1d"`` expand (core/steps_1d.py) allgathers one n-bit bitmap
+per level — (p-1)*n/64 words regardless of frontier size, which is
+exactly the O(n*p) scaling the paper's §4/§6 analysis charges against 1D
+on small frontiers.  Buluc & Madduri's sparse formulation ships only the
+live frontier: each processor owns the newly discovered chunk of the
+frontier (1D discoveries are always locally owned), so the owner packs
+its frontier ids into a fixed-capacity send bucket and one tiled
+allgather delivers it to every peer — n_f*(p-1) words on the wire, a win
+while n_f < n/64.  (With the adjacency partitioned by destination, every
+strip may hold out-edges of any frontier vertex, so the per-destination
+buckets of a true alltoall would all be identical — the allgather is
+that exchange without materializing p copies.)
+
+Static shapes force a capacity: the per-destination buckets hold
+``cap_x`` ids (``PlanStatics.cap_x``, planned from the graph degree
+stats by ``comm_model.plan_cap_x``).  When ANY processor's frontier
+overflows its buckets the level falls back to the dense bitmap
+allgather — a per-level hybrid mirroring the paper's direction-
+optimizing switch, with the same globally-consistent-predicate
+``lax.cond`` discipline as the 2D bitmap fold (collectives in both
+branches lower as whole-mesh ops).  Bottom-up levels always take the
+dense bitmap: the heuristics only enter bottom-up when the frontier is
+large, where the bitmap is the cheaper encoding anyway.
+
+``wire_expand`` records the LIVE ids each level shipped — the alltoallv
+volume of the sparse formulation, ``comm_model.sparse_expand_1d_words``
+— or the fallback bitmap words (``comm_model.expand_1d_level_words``),
+giving the closed form ``comm_model.topdown_1d_words`` its first
+measured counterpart.  The static-shape allgather physically moves the
+full cap_x-slot buckets, sentinels included
+(``comm_model.sparse_expand_padded_words``); ids are i32, so at the
+planned crossover capacity the padded buckets cost the same bytes as
+the n-bit bitmap — the padding is a wash, and the id counter is the
+figure the variable-length exchange of the papers would put on the
+wire.  Local discovery is unchanged: the sparse exchange reconstructs
+the same packed frontier bitmap, so every "1d" LocalOps entry (dense
+edge-parallel, strip-CSR, strip-DCSC Pallas) plugs in as-is.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import comm_model
+from repro.core.frontier import (INT_INF, pack_bits, pack_ids, unpack_bits,
+                                 unpack_ids)
+from repro.core.steps import zero_counters
+from repro.core.steps_1d import bottomup_level_1d, _resolve_ops
+
+
+class LevelArgs1DS(NamedTuple):
+    """Static/per-search context for the sparse-exchange 1D steps.  The
+    field set is a superset of LevelArgs1D (same names), so the dense
+    bottom-up step and the "1d" LocalOps closures run against it
+    unchanged; ``cap_x`` is the only addition."""
+    part: "object"            # Partition1D (static)
+    axis: str                 # the single mesh axis name
+    cap_x: int                # sparse exchange: ids per send bucket
+    use_edge_dst: bool = False  # bottom-up: read per-edge rows (no search)
+    local_mode: str = "dense"  # "dense" | "kernel" (Pallas)
+    storage: str = "csr"      # "csr" | "dcsc" (strip pointer compression)
+    cap_f: int = 0            # kernel csr: frontier capacity (0 = n)
+    maxdeg: int = 0           # kernel mode: max column-segment length
+    ops: "object" = None      # LocalOps entry (None = look up from strings)
+
+
+def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part):
+    """Owner-directed sparse frontier exchange with dense fallback.
+
+    Each processor compacts its owned frontier chunk into a
+    fixed-capacity bucket of global ids (``pack_ids``) and broadcasts it
+    with one tiled all_gather; receivers scatter the ids back into the
+    full n-vertex packed bitmap (``unpack_ids``).  With the adjacency
+    partitioned by DESTINATION, every strip can hold edges out of any
+    frontier vertex, so a per-destination alltoall would carry p
+    identical buckets — the allgather IS that exchange without
+    materializing the copies (a genuinely filtered alltoall needs a
+    source-partitioned format; see ROADMAP).  If any processor holds
+    more than ``cap_x`` frontier vertices the WHOLE level reverts to the
+    dense bitmap (the predicate is pmax-synced, so every device takes
+    the same branch and the collectives stay aligned — ids are never
+    silently truncated).
+
+    Returns (f_words uint32[n//32], wire f32 — live ids shipped on the
+    sparse path (the modeled alltoallv volume; the padded buffer is
+    ``comm_model.sparse_expand_padded_words``) or bitmap words on the
+    dense path, overflowed bool)."""
+    p = part.p
+    i = lax.axis_index(axis)
+    n_local = jnp.sum(front, dtype=jnp.int32)
+    # global predicate: the cond branches contain collectives
+    over = lax.pmax(n_local, axis) > cap_x
+    n_f = lax.psum(n_local.astype(jnp.float32), axis)
+
+    def sparse(f):
+        ids = pack_ids(f, cap_x, i * part.chunk, part.n)
+        recv = lax.all_gather(ids, axis, tiled=True)     # (p*cap_x,)
+        return unpack_ids(recv, part.n)
+
+    def dense(f):
+        return lax.all_gather(pack_bits(f), axis, tiled=True)
+
+    f_words = lax.cond(over, dense, sparse, front)
+    wire = jnp.where(
+        over,
+        jnp.float32(comm_model.expand_1d_level_words(part.n, p)),
+        jnp.float32(comm_model.sparse_expand_1d_words(n_f, p)))
+    return f_words, wire, over
+
+
+def topdown_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
+                      front: jax.Array, args: LevelArgs1DS
+                      ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One sparse-exchange 1D top-down level: identical to the dense 1D
+    level except the expand ships frontier ids (with bitmap fallback)."""
+    part = args.part
+    ctr = zero_counters()
+
+    # --- Expand: owner-directed sparse ids, dense bitmap on overflow ----
+    f_words, wire, _ = sparse_exchange_1d(front, args.axis, args.cap_x, part)
+    f_all = unpack_bits(f_words)                     # (n,) bool
+    ctr["wire_expand"] = wire
+    n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
+    ctr["use_expand"] = jnp.float32(
+        comm_model.sparse_expand_1d_words(n_f, part.p))
+
+    # --- Local discovery: unchanged from "1d" (same LocalOps entries) ---
+    cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
+                                                part.chunk, jnp.int32(0),
+                                                args)
+    ctr["edges_examined"] = lax.psum(ex_local, args.axis)
+    ctr["edges_useful"] = lax.psum(
+        jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
+        args.axis)
+
+    # --- Local update (children are owned; no fold) ----------------------
+    newly = (pi == -1) & (cand != INT_INF)
+    pi = jnp.where(newly, cand, pi)
+    return pi, newly, ctr
+
+
+def bottomup_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
+                       front: jax.Array, args: LevelArgs1DS
+                       ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Bottom-up levels always exchange the dense bitmap: the direction
+    heuristic only enters bottom-up on large frontiers, where
+    n_f*(p-1) id words would exceed the (p-1)*n/64 bitmap — reusing the
+    "1d" step verbatim (the LevelArgs field names line up)."""
+    return bottomup_level_1d(g, pi, front, args)
+
+
+__all__ = ["LevelArgs1DS", "sparse_exchange_1d", "topdown_level_1ds",
+           "bottomup_level_1ds"]

@@ -138,6 +138,140 @@ def main():
             d1 = depths_from_parents(edges.n, r1.parents, root)
             assert np.array_equal(d1, d2), (storage, int((d1 != d2).sum()))
         print("OK oned")
+    elif mode == "onedsparse":
+        # the "1ds" tentpole acceptance: on 16 strips the sparse
+        # owner-directed exchange must (a) produce valid trees matching
+        # the 1d/2d depths, (b) measure wire_expand within 2x of the
+        # Buluc & Madduri closed form topdown_1d_words when the buckets
+        # never overflow, (c) beat the dense bitmap on the first two
+        # (small-frontier) levels, and (d) never ship MORE than the
+        # bitmap when the planned hybrid capacity is in force.
+        from repro.core import comm_model
+        p = n_dev
+        for scale, diro in ((9, True), (10, False)):
+            edges = rmat_graph(scale, edge_factor=8, seed=scale)
+            deg = edges.out_degrees()
+            root = int(np.flatnonzero(deg)[0])
+            g1 = build_blocked_1d(edges, p, align=32, cap_pad=32)
+            cfg_s = BFSConfig(decomposition="1ds",
+                              direction_optimizing=diro)
+            rs = run_bfs(g1, root, cfg_s, make_local_mesh_1d(p))
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       root, rs.parents)
+            assert ok, (scale, msg)
+            r1 = run_bfs(g1, root,
+                         BFSConfig(decomposition="1d",
+                                   direction_optimizing=diro),
+                         make_local_mesh_1d(p))
+            g2 = build_blocked(edges, 4, 4, align=32, cap_pad=32)
+            r2 = run_bfs(g2, root,
+                         BFSConfig(direction_optimizing=diro),
+                         make_local_mesh(4, 4))
+            ds = depths_from_parents(edges.n, rs.parents, root)
+            assert np.array_equal(
+                ds, depths_from_parents(edges.n, r1.parents, root)), scale
+            assert np.array_equal(
+                ds, depths_from_parents(edges.n, r2.parents, root)), scale
+            for k in ("wire_transpose", "wire_fold", "wire_rotate",
+                      "wire_updates"):
+                assert rs.counters[k] == 0.0, (k, rs.counters[k])
+
+        # (b)+(c): scale-14, pure top-down, overflow disabled
+        # (cap_x = chunk), a typical low-degree root
+        edges = rmat_graph(14, edge_factor=4, seed=14)
+        deg = edges.out_degrees()
+        root = int(np.flatnonzero((deg > 0) & (deg <= 32))[0])
+        g1 = build_blocked_1d(edges, p, align=32, cap_pad=32)
+        cfg = BFSConfig(decomposition="1ds", direction_optimizing=False)
+        r = run_bfs(g1, root, cfg, make_local_mesh_1d(p),
+                    cap_x=g1.part.chunk)
+        ok, msg = validate_parents(edges.n, edges.src, edges.dst, root,
+                                   r.parents)
+        assert ok, msg
+        got = r.counters["wire_expand"]
+        want = comm_model.topdown_1d_words(edges.m, p)
+        assert 0.5 * want <= got <= 2.0 * want, (got, want)
+        # per-level measured words (stats col 4): every non-overflow
+        # level matches the sparse closed form on that level's frontier
+        sizes = r.level_stats[: r.n_levels, 0]
+        wires = r.level_stats[: r.n_levels, 4]
+        model = np.array([comm_model.sparse_expand_1d_words(s, p)
+                          for s in sizes])
+        assert np.allclose(wires, model, rtol=1e-5), (wires, model)
+        # the first two levels beat the dense bitmap by a wide margin
+        dense_lvl = comm_model.expand_1d_level_words(g1.part.n, p)
+        assert wires[0] < dense_lvl and wires[1] < dense_lvl, (
+            wires[:2], dense_lvl)
+        # ... while the dense "1d" run pays dense_lvl on EVERY level
+        r1 = run_bfs(g1, root, BFSConfig(decomposition="1d",
+                                         direction_optimizing=False),
+                     make_local_mesh_1d(p))
+        assert np.allclose(r1.level_stats[: r1.n_levels, 4], dense_lvl)
+        assert np.array_equal(r1.parents, r.parents)
+
+        # (d): the planned hybrid cap never ships an overflowing sparse
+        # level — every level's words are either the sparse form (fits)
+        # or exactly the dense bitmap (fallback), totalling no more than
+        # a small factor of the pure-dense volume
+        rh = run_bfs(g1, root, cfg, make_local_mesh_1d(p))
+        assert np.array_equal(rh.parents, r.parents)
+        wires_h = rh.level_stats[: rh.n_levels, 4]
+        sizes_h = rh.level_stats[: rh.n_levels, 0]
+        for s, w in zip(sizes_h, wires_h):
+            sparse_w = comm_model.sparse_expand_1d_words(s, p)
+            assert (abs(w - sparse_w) <= 1e-5 * max(sparse_w, 1)
+                    or abs(w - dense_lvl) <= 1e-5 * dense_lvl), (s, w)
+        assert wires_h.sum() <= r1.counters["wire_expand"] + 1e-3, (
+            wires_h.sum(), r1.counters["wire_expand"])
+        print("OK onedsparse")
+    elif mode == "podheur":
+        # per-slice direction heuristic regression: two pod-batched
+        # roots of different eccentricity must switch modes on their
+        # OWN frontier sizes — the batched program's per-root
+        # level_stats (n_f, m_f, mode) must be bit-identical to each
+        # root's single-root run.  (The old loop state fed the
+        # cross-pod pmax'd n_f back into the go_td heuristic, so the
+        # pod with the smaller frontier switched on its lockstep
+        # partner's numbers — and its stats recorded them.)  Runs in
+        # the sparse-exchange "1ds" entry, doubling as the multi-device
+        # run_batch coverage for the third registry entry.
+        import jax
+        from repro.core.engine import plan_bfs
+        assert n_dev >= 8
+        edges = rmat_graph(9, edge_factor=8, seed=9)
+        deg = edges.out_degrees()
+        roots = np.flatnonzero(deg > 0)[:8].astype(np.int32)
+        g1 = build_blocked_1d(edges, 4, align=32, cap_pad=32)
+        devs = np.asarray(jax.devices()[:8]).reshape(2, 4)
+        mesh = jax.sharding.Mesh(devs, ("pod", "data"))
+        eng = plan_bfs(g1, BFSConfig(decomposition="1ds"), mesh).compile()
+        singles = [eng.run(int(r)) for r in roots]
+        diff = [(i, j) for i in range(len(roots))
+                for j in range(i + 1, len(roots))
+                if not np.array_equal(singles[i].level_stats,
+                                      singles[j].level_stats)]
+        assert diff, "need two roots with different frontier trajectories"
+        # prefer different eccentricity: the searches must also switch
+        # back to top-down / terminate at different levels
+        a, b = max(diff, key=lambda ij: abs(singles[ij[0]].n_levels
+                                            - singles[ij[1]].n_levels))
+        pair = np.array([roots[a], roots[b]], dtype=np.int32)
+        bp = eng.run_batch(pair)         # one root per pod, in lockstep
+        for i, j in enumerate((a, b)):
+            s = singles[j]
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       int(pair[i]), bp.parents[i])
+            assert ok, (i, msg)
+            # lockstep trip count = the slower search's level count
+            assert bp.n_levels[i] == max(singles[a].n_levels,
+                                         singles[b].n_levels)
+            got = bp.level_stats[i][: s.n_levels, :3]
+            want = s.level_stats[: s.n_levels, :3]
+            assert np.array_equal(got, want), (
+                int(pair[i]), got[:, (0, 2)], want[:, (0, 2)])
+            # levels past this root's own search stay empty
+            assert (bp.level_stats[i][s.n_levels:, 0] == 0).all()
+        print("OK podheur")
     elif mode == "multiroot":
         edges = rmat_graph(10, edge_factor=8, seed=9)
         rng = np.random.default_rng(0)
@@ -193,7 +327,7 @@ def main():
         arrs = g.device_arrays()
         sh = NamedSharding(mesh3, P("data", "model"))
         gdev = {k: jax.device_put(np.asarray(arrs[k]), sh) for k in keys}
-        pis, levels = fn(gdev, jax.device_put(
+        pis, levels, _ = fn(gdev, jax.device_put(
             roots[:pods], NamedSharding(mesh3, P("pod"))))
         pis = np.asarray(pis)            # (pr, pc, n_roots, chunk)
         for r in range(pods):

@@ -1,0 +1,217 @@
+"""Sparse-exchange 1D decomposition ("1ds"): oracle parity, the
+overflow-fallback hybrid, the sparse-exchange comm-model closed forms,
+cap_x planning, and the 16-device subprocess acceptance case."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import BFSConfig, get_config
+from repro.core import comm_model
+from repro.core.bfs import run_bfs
+from repro.core.engine import plan_bfs
+from repro.core.ref import bfs_depths, depths_from_parents, validate_parents
+from repro.graph.formats import build_blocked, build_blocked_1d
+from repro.graph.rmat import preprocess, rmat_graph
+from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+
+_HERE = os.path.dirname(__file__)
+
+
+# ---------------------------------------------------------------------------
+# Oracle parity (single device, property-based; random cap_x exercises
+# both the sparse path and the overflow fallback)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_bfs_1ds_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 60))
+    m = int(rng.integers(1, 4 * n))
+    e = preprocess(rng.integers(0, n, m), rng.integers(0, n, m), n,
+                   symmetrize=True)
+    if e.m == 0:
+        return
+    root = int(e.src[0])
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    cfg = BFSConfig(decomposition="1ds",
+                    direction_optimizing=bool(rng.integers(0, 2)))
+    cap_x = int(rng.choice([0, 32, g.part.chunk]))
+    res = run_bfs(g, root, cfg, make_local_mesh_1d(1), cap_x=cap_x)
+    ok, msg = validate_parents(n, e.src, e.dst, root, res.parents)
+    assert ok, msg
+    d = bfs_depths(n, e.src, e.dst, root)
+    assert np.array_equal(depths_from_parents(n, res.parents, root), d)
+
+
+def test_bfs_1ds_registered_config():
+    cfg = get_config("bfs-rmat-1ds")
+    assert cfg.decomposition == "1ds" and cfg.direction_optimizing
+    e = rmat_graph(8, edge_factor=8, seed=1)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    root = int(e.src[0])
+    res = run_bfs(g, root, cfg, make_local_mesh_1d(1))
+    ok, msg = validate_parents(e.n, e.src, e.dst, root, res.parents)
+    assert ok, msg
+    assert res.counters["edges_examined"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Three-way parity on the same fixed R-MAT graph
+# ---------------------------------------------------------------------------
+
+
+def test_parity_1ds_vs_1d_vs_2d():
+    """Single-device candidate-min semantics are identical across the
+    three decompositions, so the parent arrays (not just depths) must
+    agree — and 1ds must leave the 1D-absent wire phases at zero."""
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g1 = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    g2 = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    r1 = run_bfs(g1, root, BFSConfig(decomposition="1d"),
+                 make_local_mesh_1d(1))
+    rs = run_bfs(g1, root, BFSConfig(decomposition="1ds"),
+                 make_local_mesh_1d(1))
+    r2 = run_bfs(g2, root, BFSConfig(), make_local_mesh(1, 1))
+    assert np.array_equal(rs.parents, r1.parents)
+    d2 = depths_from_parents(e.n, r2.parents, root)
+    assert np.array_equal(depths_from_parents(e.n, rs.parents, root), d2)
+    assert rs.n_levels == r1.n_levels
+    for k in ("wire_transpose", "wire_fold", "wire_rotate", "wire_updates"):
+        assert rs.counters[k] == 0.0, k
+
+
+# ---------------------------------------------------------------------------
+# Overflow fallback
+# ---------------------------------------------------------------------------
+
+
+def test_overflow_falls_back_to_dense_bitmap():
+    """With buckets far smaller than the mid-search frontier, the sparse
+    path would TRUNCATE ids; the pmax-guarded fallback must take the
+    dense bitmap on those levels instead, leaving the tree exact."""
+    e = rmat_graph(9, edge_factor=8, seed=7)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    cfg = BFSConfig(decomposition="1ds", direction_optimizing=False)
+    tiny = run_bfs(g, root, cfg, make_local_mesh_1d(1), cap_x=32)
+    # the frontier really does exceed the buckets at some level
+    assert tiny.level_stats[: tiny.n_levels, 0].max() > 32
+    ok, msg = validate_parents(e.n, e.src, e.dst, root, tiny.parents)
+    assert ok, msg
+    big = run_bfs(g, root, cfg, make_local_mesh_1d(1), cap_x=g.part.chunk)
+    assert np.array_equal(tiny.parents, big.parents)
+    assert tiny.n_levels == big.n_levels
+
+
+def test_batch_level_stats_match_single_runs():
+    """run_batch reports each root's own per-level stats; at pods=1 they
+    must be bit-identical to the single-root program's (the per-slice
+    heuristic regression proper needs >1 pod — the ``podheur``
+    subprocess case in tests/_dist_bfs_main.py pins that)."""
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    roots = np.flatnonzero(e.out_degrees() > 0)[:2]
+    eng = plan_bfs(g, BFSConfig(decomposition="1ds"),
+                   make_local_mesh_1d(1, pods=1)).compile()
+    batch = eng.run_batch(roots)
+    for i, r in enumerate(roots):
+        single = eng.run(int(r))
+        assert np.array_equal(batch.level_stats[i], single.level_stats), r
+        assert batch.n_levels[i] == single.n_levels
+
+
+# ---------------------------------------------------------------------------
+# Comm-model closed forms + cap_x planning
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_exchange_closed_forms():
+    n, p = 1 << 20, 16
+    # the dense whole-search form is n_levels copies of the level form
+    assert comm_model.expand_1d_words(n, p, 7) \
+        == 7 * comm_model.expand_1d_level_words(n, p)
+    # p=1 moves nothing in either encoding
+    assert comm_model.expand_1d_level_words(n, 1) == 0.0
+    assert comm_model.sparse_expand_1d_words(1000.0, 1) == 0.0
+    # sparse wins below the n/64 crossover, loses above it
+    assert comm_model.sparse_expand_1d_words(n / 64 - 1, p) \
+        < comm_model.expand_1d_level_words(n, p)
+    assert comm_model.sparse_expand_1d_words(n / 64 + 1, p) \
+        > comm_model.expand_1d_level_words(n, p)
+    # the hybrid model switches on bucket overflow
+    cap = 128
+    assert comm_model.hybrid_expand_1d_level_words(cap, 500.0, n, p, cap) \
+        == comm_model.sparse_expand_1d_words(500.0, p)
+    assert comm_model.hybrid_expand_1d_level_words(cap + 1, 500.0, n, p, cap) \
+        == comm_model.expand_1d_level_words(n, p)
+
+
+def test_plan_cap_x_bounds():
+    n, p = 1 << 20, 16
+    cap = comm_model.plan_cap_x(n, p, m=8 * n)
+    chunk = n // p
+    assert 32 <= cap <= chunk and cap % 32 == 0
+    # crossover term dominates on big sparse graphs: ~n/(64p)
+    assert abs(cap - n // (64 * p)) <= 32
+    # degree headroom is per BUCKET (a level-1 frontier spreads over all
+    # p owners): the planned global admission p*cap_x stays within
+    # bucket granularity of the n/64 dense/sparse crossover, so a
+    # fitting sparse level never ships much more than the bitmap
+    assert p * comm_model.plan_cap_x(n, p, m=64 * n) <= max(n // 64, 32 * p)
+    # never exceeds the owned chunk, even on tiny graphs
+    assert comm_model.plan_cap_x(64, 2, m=1000) <= 32
+    # the static padded buffer form: p buckets to p-1 peers each
+    assert comm_model.sparse_expand_padded_words(32, 16) == 16 * 15 * 32
+    assert comm_model.sparse_expand_padded_words(32, 1) == 0.0
+    # engine planning: plan_bfs derives cap_x from the graph when unset
+    e = rmat_graph(8, edge_factor=8, seed=1)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    plan = plan_bfs(g, BFSConfig(decomposition="1ds"), make_local_mesh_1d(1))
+    assert plan.statics.cap_x \
+        == comm_model.plan_cap_x(g.part.n, g.part.p, int(g.m))
+    plan2 = plan_bfs(g, BFSConfig(decomposition="1ds"),
+                     make_local_mesh_1d(1), cap_x=64)
+    assert plan2.statics.cap_x == 64
+
+
+def test_measured_wire_matches_sparse_model_single_device():
+    """p=1 ships nothing: every level's measured expand words must be 0
+    in 1ds (and the per-level stats column must exist and be used)."""
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    r = run_bfs(g, root, BFSConfig(decomposition="1ds"),
+                make_local_mesh_1d(1))
+    assert r.level_stats.shape[1] == 5
+    assert r.counters["wire_expand"] == 0.0
+    assert (r.level_stats[: r.n_levels, 3] == 1).all()
+    assert (r.level_stats[r.n_levels:, 3] == 0).all()
+    assert (r.level_stats[:, 4] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device acceptance case (subprocess, 16 forced host devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_distributed_bfs_1ds_acceptance():
+    """Scale-14 R-MAT on 16 strips: measured "1ds" wire_expand within 2x
+    of comm_model.topdown_1d_words, the first two levels beating the
+    dense bitmap, depth parity with "1d"/"2d", and the hybrid fallback
+    (see tests/_dist_bfs_main.py mode "onedsparse")."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    main = os.path.join(_HERE, "_dist_bfs_main.py")
+    r = subprocess.run([sys.executable, main, "16", "onedsparse"],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    assert r.returncode == 0, f"onedsparse failed:\n{r.stdout}\n{r.stderr}"
+    assert "OK onedsparse" in r.stdout

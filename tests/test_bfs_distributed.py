@@ -26,7 +26,8 @@ def _run(n_dev, mode, timeout=1200):
 
 
 @pytest.mark.parametrize("mode", ["grids", "kernel", "counters",
-                                  "multiroot", "optimized", "multipod"])
+                                  "multiroot", "optimized", "multipod",
+                                  "podheur"])
 def test_distributed_bfs(mode):
     _run(16, mode)
 

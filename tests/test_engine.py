@@ -28,8 +28,12 @@ def fixed_graph():
 
 
 def _mesh_for(d, **kw):
-    return make_local_mesh_1d(1, **kw) if d == "1d" \
-        else make_local_mesh(1, 1, **kw)
+    return make_local_mesh(1, 1, **kw) if d == "2d" \
+        else make_local_mesh_1d(1, **kw)
+
+
+def _graph_for(d, g1, g2):
+    return g2 if d == "2d" else g1      # 1d and 1ds share the strip format
 
 
 # ---------------------------------------------------------------------------
@@ -38,14 +42,14 @@ def _mesh_for(d, **kw):
 
 
 def test_decomp_registry():
-    assert decomp.registered_decompositions() == ("1d", "2d")
+    assert decomp.registered_decompositions() == ("1d", "1ds", "2d")
     with pytest.raises(ValueError, match="no decomposition registered"):
         decomp.get_decomposition("1.5d")
     for name in decomp.registered_decompositions():
         entry = decomp.get_decomposition(name)
         assert entry.n_axes == len(entry.axis_sizes(
-            make_partition_1d(64, 1, align=32) if name == "1d"
-            else make_partition(64, 1, 1, align=32)))
+            make_partition(64, 1, 1, align=32) if name == "2d"
+            else make_partition_1d(64, 1, align=32)))
 
 
 def test_unknown_decomposition_rejected_at_plan(fixed_graph):
@@ -66,7 +70,7 @@ def test_engine_parity_matrix(fixed_graph):
     e, g1, g2 = fixed_graph
     root = int(np.flatnonzero(e.out_degrees())[0])
     for dc, lm, st_ in local_ops.registered_combos():
-        g = g1 if dc == "1d" else g2
+        g = _graph_for(dc, g1, g2)
         mesh = _mesh_for(dc)
         cfg = BFSConfig(decomposition=dc, storage=st_)
         ref = run_bfs(g, root, cfg, mesh, local_mode=lm)
@@ -162,23 +166,71 @@ def test_engine_requires_concrete_graph():
         BFSEngine(plan)
 
 
+def test_plan_rejects_missing_cap_x():
+    """Graph-less "1ds" plans must pass cap_x explicitly (plan_bfs
+    derives it from the graph degree stats)."""
+    part = make_partition_1d(256, 1, align=32)
+    with pytest.raises(ValueError, match="cap_x"):
+        plan_for_part(part, BFSConfig(decomposition="1ds"),
+                      make_local_mesh_1d(1))
+    with pytest.raises(ValueError, match="exceeds the owned chunk"):
+        plan_for_part(part, BFSConfig(decomposition="1ds"),
+                      make_local_mesh_1d(1), cap_x=part.chunk + 32)
+    plan_for_part(part, BFSConfig(decomposition="1ds"),
+                  make_local_mesh_1d(1), cap_x=32)   # explicit cap is fine
+
+
+# ---------------------------------------------------------------------------
+# Root validation at the engine boundary
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_out_of_range_roots():
+    """Graphs are padded up to p*chunk: a root in the ghost range (or
+    negative) used to silently traverse nothing and return an all-empty
+    parents array.  run/run_many/run_batch must all reject it."""
+    from repro.graph.rmat import preprocess
+    rng = np.random.default_rng(0)
+    n = 300                              # NOT a multiple of the quantum
+    e = preprocess(rng.integers(0, n, 600), rng.integers(0, n, 600), n,
+                   symmetrize=True)
+    g1 = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    g2 = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    for dc in ("2d", "1d", "1ds"):
+        g = _graph_for(dc, g1, g2)
+        eng = plan_bfs(g, BFSConfig(decomposition=dc),
+                       _mesh_for(dc, pods=1)).compile()
+        n_orig, n_pad = g.part.n_orig, g.part.n
+        assert n_pad > n_orig            # the ghost range exists
+        for bad in (-1, n_orig, n_pad - 1, n_pad):
+            with pytest.raises(ValueError, match="out of range"):
+                eng.run(bad)
+        with pytest.raises(ValueError, match="out of range"):
+            eng.run_many([0, n_orig])
+        with pytest.raises(ValueError, match="out of range"):
+            eng.run_batch([0, n_orig])
+        # in-range roots still work after the rejects
+        assert eng.run(0).parents.shape == (n_orig,)
+
+
 # ---------------------------------------------------------------------------
 # Pod-batched multi-source runs (both decompositions)
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("dc", ["1d", "2d"])
+@pytest.mark.parametrize("dc", ["1d", "1ds", "2d"])
 def test_run_batch_valid_multisource(fixed_graph, dc):
     """run_batch must produce valid trees with oracle depths from every
-    root, in the 1D decomposition as well as 2D (the pod axis batches
+    root, in the 1D decompositions as well as 2D (the pod axis batches
     whole searches; pods=1 exercises the full program shape)."""
     e, g1, g2 = fixed_graph
-    g = g1 if dc == "1d" else g2
+    g = _graph_for(dc, g1, g2)
     roots = np.flatnonzero(e.out_degrees() > 0)[:4]
     eng = plan_bfs(g, BFSConfig(decomposition=dc),
                    _mesh_for(dc, pods=1)).compile()
     batch = eng.run_batch(roots)
     assert batch.parents.shape == (len(roots), e.n)
+    assert batch.level_stats.shape == (len(roots), decomp.MAX_LEVELS, 5)
     for i, r in enumerate(roots):
         ok, msg = validate_parents(e.n, e.src, e.dst, int(r),
                                    batch.parents[i])
@@ -216,6 +268,23 @@ def test_make_bfs_fn_1d_overrides_decomposition():
     _, keys = make_bfs_fn_1d(make_local_mesh_1d(1), part,
                              BFSConfig(decomposition="2d"))
     assert "seg_ptr" not in keys          # 1D key set, not 2D
+
+
+def test_compat_builders_accept_cap_x():
+    """The legacy builders must be able to build "1ds" programs — cap_x
+    has no graph to be planned from there, so they pass it through."""
+    import jax
+    from repro.core.bfs import make_bfs_fn, make_multiroot_bfs_fn
+    part = make_partition_1d(256, 1, align=32)
+    _, keys = make_bfs_fn(make_local_mesh_1d(1), part,
+                          BFSConfig(decomposition="1ds"), cap_x=32)
+    assert "edge_src" in keys
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
+    _, keys = make_multiroot_bfs_fn(mesh, part,
+                                    BFSConfig(decomposition="1ds"),
+                                    cap_seg=0, n_roots=1, cap_x=32)
+    assert "edge_src" in keys
 
 
 def test_cfg_decomposition_read_directly(fixed_graph):

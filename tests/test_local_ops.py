@@ -17,7 +17,7 @@ from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
 
 def test_registry_covers_fig6_grid():
     combos = set(local_ops.registered_combos())
-    for decomp in ("1d", "2d"):
+    for decomp in ("1d", "1ds", "2d"):
         for lm in ("dense", "kernel"):
             for st_ in ("csr", "dcsc"):
                 assert (decomp, lm, st_) in combos
@@ -27,6 +27,13 @@ def test_registry_covers_fig6_grid():
     for combo in combos:
         ops = local_ops.get_local_ops(*combo)
         assert "deg_A" in ops.keys and "nnz" in ops.keys, combo
+    # "1ds" mirrors the "1d" entries exactly (same strips, same kernels)
+    for lm in ("dense", "kernel"):
+        for st_ in ("csr", "dcsc"):
+            a = local_ops.get_local_ops("1d", lm, st_)
+            b = local_ops.get_local_ops("1ds", lm, st_)
+            assert a.keys == b.keys and a.topdown is b.topdown
+            assert a.bottomup is b.bottomup
 
 
 # ---------------------------------------------------------------------------
@@ -56,8 +63,9 @@ def test_parity_matrix(fixed_graph):
     d_ref = bfs_depths(e.n, e.src, e.dst, root)
     res = {}
     for decomp, lm, st_ in local_ops.registered_combos():
-        g = g1 if decomp == "1d" else g2
-        mesh = make_local_mesh_1d(1) if decomp == "1d" else make_local_mesh(1, 1)
+        g = g2 if decomp == "2d" else g1       # 1d/1ds share the strips
+        mesh = make_local_mesh(1, 1) if decomp == "2d" \
+            else make_local_mesh_1d(1)
         cfg = BFSConfig(decomposition=decomp, storage=st_)
         r = run_bfs(g, root, cfg, mesh, local_mode=lm)
         ok, msg = validate_parents(e.n, e.src, e.dst, root, r.parents)
@@ -72,7 +80,7 @@ def test_parity_matrix(fixed_graph):
         assert np.array_equal(res[c].parents, base), c
 
     wire_keys = [k for k in COUNTER_KEYS if k != "edges_examined"]
-    for decomp in ("1d", "2d"):
+    for decomp in ("1d", "1ds", "2d"):
         group = [c for c in combos if c[0] == decomp]
         r0 = res[group[0]]
         for c in group[1:]:
