@@ -145,6 +145,53 @@ def sweep_local_formats(scale: int, grid, n_devices: int = 16,
     return rows
 
 
+def bench_trajectory(scale: int = 14, grid=(4, 4), n_devices: int = 16,
+                     roots: int = 2, degree: int = 4,
+                     out_json: str = "BENCH_bfs.json") -> Dict:
+    """Seed/extend the bench trajectory: the pinned scale-14 / p=16
+    R-MAT config (the same graph family as the 16-device acceptance
+    tests) through all three decompositions, each compiled BOTH ways —
+    ``instrument=False`` (the latency-lean fast path the paper's
+    depth/time/TEPS runs use) and ``instrument=True`` (full counters).
+    Writes ``{traverse_s, TEPS, level_collectives}`` per decomposition
+    so future PRs diff traversal latency and the compiled collective
+    schedule against a pinned artifact."""
+    out = {"config": {"scale": scale, "degree": degree, "grid": list(grid),
+                      "n_devices": n_devices, "roots": roots},
+           "decompositions": {}}
+    for decomp in ("1d", "1ds", "2d"):
+        # ONE worker process builds both engines and interleaves the
+        # timing (ABBA), so the comparison is not smeared by
+        # process-level drift; ``traverse_s`` is the best-observed
+        # per-root latency (forced-host-device runs are noisy)
+        res = run_worker({"scale": scale, "grid": list(grid),
+                          "roots": roots, "degree": degree,
+                          "decomposition": decomp,
+                          "compare_instrument": True},
+                         n_devices=n_devices)
+        row = {}
+        for label in ("fast", "instrumented"):
+            b = res[label]
+            row[label] = {"traverse_s": b["hmean_s"],
+                          "traverse_min_s": b["min_s"],
+                          "teps": b["teps"],
+                          "level_collectives": b["hlo_collectives"],
+                          "compile_s": b.get("compile_s"),
+                          "times_s": b["times"]}
+        row["speedup_fast"] = (row["instrumented"]["traverse_s"]
+                               / row["fast"]["traverse_s"])
+        emit(f"bfs_traj_s{scale}_{decomp}_fast",
+             row["fast"]["traverse_s"] * 1e6,
+             f"teps={row['fast']['teps']:.3e};"
+             f"collectives={row['fast']['level_collectives']['total']};"
+             f"speedup_vs_instrumented={row['speedup_fast']:.3f}")
+        out["decompositions"][decomp] = row
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
 def engine_timing_summary(rows) -> List[Dict]:
     """Compile-vs-traverse split per sweep row (the engine's promise:
     per-root time excludes compilation), as a compact artifact."""
@@ -184,6 +231,15 @@ def _main():
                     help="also run the 1d/1ds/2d sweep_decompositions "
                          "and write the dense-vs-sparse expand-words "
                          "artifact to this path")
+    ap.add_argument("--bench-out", default=None,
+                    help="run bench_trajectory (instrumented-vs-fast on "
+                         "the pinned scale-14/p=16 R-MAT config) and "
+                         "write BENCH_bfs.json-style rows to this path")
+    ap.add_argument("--bench-scale", type=int, default=14,
+                    help="override the pinned bench_trajectory scale")
+    ap.add_argument("--bench-devices", type=int, default=16,
+                    help="override the pinned bench_trajectory devices "
+                         "(grid is sqrt x sqrt)")
     a = ap.parse_args()
     pr, pc = map(int, a.grid.split("x"))
     print("name,us_per_call,derived")
@@ -197,6 +253,17 @@ def _main():
         sweep_decompositions(a.scale, (pr, pc), n_devices=a.devices,
                              roots=a.roots, out_json=a.decomp_out,
                              validate=True)
+    if a.bench_out:
+        side = int(round(a.bench_devices ** 0.5))
+        if side * side != a.bench_devices:
+            # the artifact records n_devices as the mesh size — a
+            # silently floored grid would pin numbers from a smaller
+            # mesh than the config claims
+            raise SystemExit(f"--bench-devices {a.bench_devices} is not "
+                             f"a square (the trajectory grid is NxN)")
+        bench_trajectory(scale=a.bench_scale, grid=(side, side),
+                         n_devices=a.bench_devices, roots=a.roots,
+                         out_json=a.bench_out)
 
 
 if __name__ == "__main__":

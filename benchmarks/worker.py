@@ -31,7 +31,8 @@ def main():
     cfg = BFSConfig(decomposition=decomp,
                     storage=payload.get("storage", "dcsc"),
                     fold_mode=payload.get("fold_mode", "reduce"),
-                    direction_optimizing=payload.get("diropt", True))
+                    direction_optimizing=payload.get("diropt", True),
+                    instrument=payload.get("instrument", True))
     rng = np.random.default_rng(0)
     roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
 
@@ -56,6 +57,56 @@ def main():
     # one untimed warmup execution: AOT compile never runs the program,
     # so first-dispatch/allocation overhead must not land on root 0
     eng.search(int(roots[0]))[0].block_until_ready()
+
+    if payload.get("compare_instrument"):
+        # fair instrumented-vs-fast comparison: both engines in ONE
+        # process, timing interleaved ABBA over reps so machine drift
+        # cancels; report best-observed latency alongside the hmean
+        # (forced-host-device runs are noisy — min is the stable
+        # figure, and the artifact keeps the raw times).
+        import dataclasses
+        plan_f = plan_bfs(g, dataclasses.replace(cfg, instrument=False),
+                          mesh, local_mode=local_mode,
+                          cap_f=payload.get("cap_f", 0),
+                          cap_x=payload.get("cap_x", 0))
+        eng_f = plan_f.compile()
+        eng_f.search(int(roots[0]))[0].block_until_ready()
+        for r in roots:                   # parents parity sanity
+            a = eng.to_result(eng.search(int(r)))
+            b = eng_f.to_result(eng_f.search(int(r)))
+            assert (a.parents == b.parents).all(), int(r)
+
+        def timed(engine):
+            ts = []
+            for r in roots:
+                t0 = time.perf_counter()
+                out = engine.search(int(r))
+                out[0].block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            return ts
+
+        t_i, t_f = [], []
+        for _ in range(int(payload.get("reps", 3))):
+            t_i += timed(eng)
+            t_f += timed(eng_f)
+            t_f += timed(eng_f)
+            t_i += timed(eng)
+
+        def block(engine, ts):
+            hm = len(ts) / sum(1.0 / t for t in ts)
+            return {"times": ts, "hmean_s": hm, "min_s": min(ts),
+                    "teps": edges.m_input / hm,
+                    "teps_best": edges.m_input / min(ts),
+                    "compile_s": engine.compile_s,
+                    "hlo_collectives": engine.collective_counts()}
+
+        print(json.dumps({
+            "m_input": edges.m_input, "m": edges.m, "n": edges.n,
+            "n_pad": g.part.n, "p": g.part.p, "decomposition": decomp,
+            "instrumented": block(eng, t_i), "fast": block(eng_f, t_f),
+        }))
+        return
+
     times, counters = [], None
     for r in roots:
         # time the device search only (block on parents), converting to
@@ -86,6 +137,11 @@ def main():
         "m": edges.m, "n": edges.n, "n_pad": g.part.n, "p": g.part.p,
         "cap_x": plan.statics.cap_x,
         "counters": counters, "decomposition": decomp,
+        "instrument": cfg.instrument,
+        # static collective schedule of the compiled search: the while
+        # body appears once, so this is ~the per-level schedule plus
+        # constant startup — the figure the fast path exists to shrink
+        "hlo_collectives": eng.collective_counts(),
         "compile_s": eng.compile_s, "ship_s": eng.ship_s,
         "teps": edges.m_input / hmean, **levels, **mem,
     }))

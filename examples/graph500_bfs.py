@@ -49,6 +49,10 @@ def main():
     ap.add_argument("--local-mode", choices=("dense", "kernel"),
                     default="dense")
     ap.add_argument("--storage", choices=("csr", "dcsc"), default="csr")
+    ap.add_argument("--fast", action="store_true",
+                    help="instrument=False: compile out counters/stats "
+                         "for the latency-lean level pipeline (TEPS "
+                         "runs; the comm-volume report is skipped)")
     args = ap.parse_args()
     pr, pc = map(int, args.grid.split("x"))
 
@@ -63,7 +67,8 @@ def main():
         graph = build_blocked(edges, pr, pc, align=32)
         mesh = make_local_mesh(pr, pc)
     cfg = BFSConfig(decomposition=args.decomposition, storage=args.storage,
-                    direction_optimizing=not args.no_diropt)
+                    direction_optimizing=not args.no_diropt,
+                    instrument=not args.fast)
     rng = np.random.default_rng(0)
 
     # plan + compile once; every root below is pure traversal (the §7
@@ -91,6 +96,10 @@ def main():
               f"{rates[-1]:.3e} TEPS, valid")
     print(f"\nharmonic-mean TEPS over {args.roots} roots "
           f"(traversal only): {harmonic_mean(rates):.3e}")
+    if args.fast:
+        # counters are compiled out of the fast program — there is no
+        # comm-volume accounting to report (run without --fast for it)
+        return
     useful = sum(v for k, v in res.counters.items() if k.startswith('use_'))
     if args.decomposition in ("1d", "1ds"):
         wt = comm_model.topdown_1d_words(edges.m, pr * pc)

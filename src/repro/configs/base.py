@@ -223,6 +223,13 @@ class BFSConfig:
     alpha: float = 14.0           # top-down -> bottom-up switch (Beamer)
     beta: float = 24.0            # bottom-up -> top-down switch
     direction_optimizing: bool = True
+    # instrument=True compiles the full counter/level_stats bookkeeping
+    # into the search program (Eq. 2 validation, crossover artifacts);
+    # instrument=False compiles it OUT and fuses the per-level scalar
+    # all-reduces the loop genuinely needs into ONE vector psum (+ one
+    # pmax under a pod axis) — the latency-lean fast path the paper's
+    # depth/time/TEPS runs use.  Parents are identical either way.
+    instrument: bool = True
     use_edge_dst: bool = False    # bottom-up O(E) row read (no searchsorted)
     compact_updates: bool = False  # bottom-up compact (child,parent) sends
     rmat_a: float = 0.57

@@ -44,3 +44,13 @@ CONFIG_1D_DCSC = register(dataclasses.replace(
 # whose closed form is comm_model.topdown_1d_words
 CONFIG_1DS = register(dataclasses.replace(
     CONFIG_1D, arch="bfs-rmat-1ds", decomposition="1ds"))
+
+# --- Latency-lean fast path (instrument=False): counters/level_stats
+# compiled out, one fused scalar reduction per level, batched bottom-up
+# update exchange — the depth+time+TEPS configuration of the paper's §7
+# runs (see README "performance"; instrumented variants above exist for
+# Eq. 2 / crossover artifacts)
+CONFIG_FAST = register(dataclasses.replace(
+    CONFIG, arch="bfs-rmat-fast", instrument=False))
+CONFIG_1DS_FAST = register(dataclasses.replace(
+    CONFIG_1DS, arch="bfs-rmat-1ds-fast", instrument=False))

@@ -26,6 +26,63 @@ def ratio_eq2(k: float, pc: int, s_b: float = 4.0) -> float:
     return (pc + 4.0 * k) / (s_b * (2.0 * pc + 1.0) / 64.0 + 2.0)
 
 
+def fold_bitmap_level_words(nr: int, pc: int, cap_w: int) -> float:
+    """Per-level, per-device wire of the bitmap fold (steps._fold_bitmap):
+    the exchange is exactly 2 bitmap all_to_all rounds (candidate
+    presence out, winner bits back — nr bits = nr/64 words each) plus
+    2 id all_to_alls (winner parent values + local offsets, pc*cap_w
+    ids each, 1 id = 1 word):
+
+        2 * nr/64  +  2 * pc * cap_w
+
+    This is the ONE place the formula lives: the live ``wire_fold``
+    counter multiplies it by p, and tests pin the counter against it —
+    docstring, counter, and model cannot drift."""
+    return 2.0 * nr / 64.0 + 2.0 * pc * cap_w
+
+
+def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
+                            fold_mode: str = "alltoall",
+                            compact_updates: bool = False) -> int:
+    """Per-level collective-op budget of the ``instrument=False`` fast
+    path, counted as collective ops in the LOWERED level body (both
+    branches of a lax.cond count — StableHLO keeps them in the text
+    even though only one executes).  ``tests/test_perf_guard.py``
+    asserts the compiled programs stay within these, so future PRs
+    cannot silently re-bloat the schedule; the shared ``_search_loop``
+    adds exactly one fused vector psum per level on top (plus one pmax
+    when searches are pod-batched).
+
+      2d top-down : transpose ppermute + allgather + fold
+                    (alltoall: 1 op; ring reduce: pc-1 ppermutes;
+                    bitmap: 4 all_to_alls — 2 bitmap rounds + winner
+                    values + offsets — and the runtime-fallback variant
+                    adds its overflow pmax + dense all_to_all branch)
+      2d bottom-up: transpose ppermute + allgather + (pc-1) hoisted
+                    rotation ppermutes + ONE batched update all_to_all
+                    (compact updates add 1 pmax + the dense-fallback
+                    all_to_all in the other cond branch)
+      1d          : one bitmap allgather per level, nothing else
+      1ds td      : sparse/dense allgather pair (one cond, 2 in text;
+                    1 executes) — the overflow predicate rides the
+                    previous level's fused reduction
+    """
+    if decomposition == "2d":
+        if mode == "td":
+            folds = {"alltoall": 1, "reduce": max(pc - 1, 1),
+                     "bitmap_pure": 4, "bitmap": 6}
+            if fold_mode not in folds:
+                raise ValueError(f"no collective budget modeled for "
+                                 f"fold_mode={fold_mode!r}")
+            return 2 + folds[fold_mode]
+        if mode == "bu":
+            return (pc - 1) + 3 + (2 if compact_updates else 0)
+    if decomposition in ("1d", "1ds") and mode in ("td", "bu"):
+        return 2 if (decomposition == "1ds" and mode == "td") else 1
+    raise ValueError(f"no collective budget modeled for "
+                     f"decomposition={decomposition!r} mode={mode!r}")
+
+
 # ---------------------------------------------------------------------------
 # 1D row decomposition (the paper's comparison baseline, Alg. 1/2)
 # ---------------------------------------------------------------------------

@@ -74,6 +74,9 @@ class PlanStatics:
     cap_f: int = 0            # kernel mode: frontier capacity (0 = nc)
     cap_x: int = 0            # 1ds sparse exchange: ids per send bucket
     n_real_edges: float = 0.0  # unpadded edge count (TEPS/metadata)
+    instrument: bool = True   # False: compile counters/level_stats OUT
+    #                           of the search program (the latency-lean
+    #                           fast path; parents identical)
 
 
 @dataclass(frozen=True)
@@ -130,11 +133,13 @@ def registered_decompositions() -> Tuple[str, ...]:
 
 
 def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
-                 sync, td_level, bu_level, sync_modes: bool = False):
+                 sync, td_level, bu_level, sync_modes: bool = False,
+                 over_cap: int = 0):
     """Frontier-size / edge-mass direction heuristics, per-level stats,
     counter accumulation.  ``td_level`` / ``bu_level`` are
-    (pi, front) -> (pi, front, ctr) step closures over the local graph
-    ``g`` (already squeezed).
+    (pi, front, lv=None) -> (pi, front, ctr) step closures over the
+    local graph ``g`` (already squeezed); ``lv`` is the fast-path
+    per-level context (see ``_search_loop_fast``).
 
     The loop state carries TWO frontier sizes: the per-slice ``n_f``
     (this search's own frontier — what the direction heuristics and the
@@ -152,9 +157,23 @@ def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
     of them, and top-down resumes only when every slice wants it.
     Entries whose collectives are group-local per slice (1d/1ds:
     all_gather / all_to_all along the strip axis only) keep sync_modes
-    False and genuinely switch per slice."""
+    False and genuinely switch per slice.
+
+    ``over_cap``: the "1ds" sparse-exchange bucket capacity; when > 0
+    the fast path carries the per-processor overflow indicator in its
+    fused reduction so the exchange step needs no predicate collective.
+
+    With ``cfg.instrument`` False the loop dispatches to
+    ``_search_loop_fast``: one fused vector psum per level (plus one
+    fused pmax when pod-batched) instead of the 6–11 scalar all-reduces
+    the instrumented program spends on counters and stats."""
     pi0 = jnp.where(gidx == root, root, jnp.int32(-1))
     front0 = gidx == root
+    if not cfg.instrument:
+        return _search_loop_fast(
+            g, pi0, front0, n_total=n_total, cfg=cfg, axes=axes, sync=sync,
+            td_level=td_level, bu_level=bu_level, sync_modes=sync_modes,
+            over_cap=over_cap)
     stats0 = jnp.zeros((MAX_LEVELS, 5), jnp.float32)
 
     def cond(st):
@@ -203,6 +222,80 @@ def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
     return pi, level, ctr, stats
 
 
+def _search_loop_fast(g, pi0, front0, *, n_total: float, cfg: BFSConfig,
+                      axes, sync, td_level, bu_level, sync_modes: bool,
+                      over_cap: int):
+    """The ``instrument=False`` level loop: the whole-search program
+    spends exactly ONE fused vector psum per level — frontier size,
+    frontier edge mass, unvisited edge mass, and (for the "1ds" hybrid)
+    the bucket-overflow indicator, stacked and reduced together — plus
+    one fused vector pmax when searches are pod-batched (lockstep
+    ``n_sync`` and, for sync_modes entries, the direction decision).
+
+    The direction heuristics read the PREVIOUS level's fused reduction:
+    the decision for level L+1 is computed at the tail of level L from
+    the post-level (pi, front) — the same values the instrumented loop
+    recomputes with separate psums at the top of L+1 — so the mode
+    sequence and the parents are bit-identical to the instrumented
+    program.  Counters and level_stats are compiled out; the returned
+    ctr/stats are constant zeros."""
+    deg = g["deg_A"]
+
+    def reduce_state(pi, front):
+        """(n_f, m_f, m_u, over) from one stacked psum over the slice."""
+        n_loc = jnp.sum(front, dtype=jnp.float32)
+        over_loc = ((n_loc > over_cap).astype(jnp.float32) if over_cap
+                    else jnp.float32(0))
+        red = lax.psum(jnp.stack([
+            n_loc,
+            jnp.sum(jnp.where(front, deg, 0), dtype=jnp.float32),
+            jnp.sum(jnp.where(pi == -1, deg, 0), dtype=jnp.float32),
+            over_loc]), axes)
+        return red[0], red[1], red[2], red[3] > 0
+
+    def decide_and_sync(mode, n_f, m_f, m_u):
+        """Next level's direction decision + the lockstep pmax, fused:
+        pmin(go_td) rides the same pmax as 1 - go_td."""
+        go_bu = (mode == 0) & (m_f > m_u / cfg.alpha)
+        go_td = (mode == 1) & (n_f < n_total / cfg.beta)
+        if sync == axes:
+            return n_f, go_bu, go_td
+        if sync_modes and cfg.direction_optimizing:
+            pm = lax.pmax(jnp.stack([
+                n_f, go_bu.astype(jnp.float32),
+                1.0 - go_td.astype(jnp.float32)]), sync)
+            return pm[0], pm[1] > 0, pm[2] < 1
+        return lax.pmax(n_f, sync), go_bu, go_td
+
+    n_f0, m_f0, m_u0, ov0 = reduce_state(pi0, front0)
+    n_sync0, gb0, gt0 = decide_and_sync(jnp.int32(0), n_f0, m_f0, m_u0)
+
+    def cond(st):
+        pi, front, mode, level, n_sync, gb, gt, ov = st
+        return (level < MAX_LEVELS) & (n_sync > 0)
+
+    def body(st):
+        pi, front, mode, level, n_sync, gb, gt, ov = st
+        if cfg.direction_optimizing:
+            new_mode = jnp.where(gb, 1, jnp.where(gt, 0, mode))
+        else:
+            new_mode = mode
+        pi2, front2, _ = lax.cond(
+            new_mode == 1,
+            lambda op: bu_level(op[0], op[1], {"over": op[2]}),
+            lambda op: td_level(op[0], op[1], {"over": op[2]}),
+            (pi, front, ov))
+        n_f2, m_f2, m_u2, ov2 = reduce_state(pi2, front2)
+        n_sync2, gb2, gt2 = decide_and_sync(new_mode, n_f2, m_f2, m_u2)
+        return (pi2, front2, new_mode, level + 1, n_sync2, gb2, gt2, ov2)
+
+    st = (pi0, front0, jnp.int32(0), jnp.int32(0), n_sync0, gb0, gt0, ov0)
+    pi, front, mode, level, n_sync, gb, gt, ov = lax.while_loop(
+        cond, body, st)
+    return pi, level, zero_counters(), jnp.zeros((MAX_LEVELS, 5),
+                                                 jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # 2D checkerboard entry
 # ---------------------------------------------------------------------------
@@ -224,8 +317,8 @@ def _bfs_body_2d(g, root, *, part: Partition2D, args: LevelArgs,
     gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
     pi, level, ctr, stats = _search_loop(
         g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
-        td_level=lambda pi, f: topdown_level(g, pi, f, args),
-        bu_level=lambda pi, f: bottomup_level(g, pi, f, args),
+        td_level=lambda pi, f, lv=None: topdown_level(g, pi, f, args, lv),
+        bu_level=lambda pi, f, lv=None: bottomup_level(g, pi, f, args, lv),
         # 2D steps ppermute (transpose / ring fold / rotation): the
         # whole mesh must take one td/bu branch per level
         sync_modes=True)
@@ -241,7 +334,8 @@ def _make_args_2d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs:
                      local_mode=ops.local_mode, storage=cfg.storage,
                      cap_f=statics.cap_f, maxdeg=statics.maxdeg,
                      use_edge_dst=cfg.use_edge_dst,
-                     compact_updates=cfg.compact_updates, ops=ops)
+                     compact_updates=cfg.compact_updates, ops=ops,
+                     instrument=statics.instrument)
 
 
 def _validate_2d(part, statics: PlanStatics) -> None:
@@ -283,8 +377,11 @@ def _make_strip_body(td_step, bu_step):
         gidx = (i * part.chunk + jnp.arange(part.chunk)).astype(jnp.int32)
         pi, level, ctr, stats = _search_loop(
             g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
-            td_level=lambda pi, f: td_step(g, pi, f, args),
-            bu_level=lambda pi, f: bu_step(g, pi, f, args))
+            td_level=lambda pi, f, lv=None: td_step(g, pi, f, args, lv),
+            bu_level=lambda pi, f, lv=None: bu_step(g, pi, f, args, lv),
+            # "1ds": the fast path carries the bucket-overflow indicator
+            # in its fused reduction (0 disables it for plain "1d")
+            over_cap=getattr(args, "cap_x", 0))
         return pi[None], level, ctr, stats
 
     return body
@@ -297,7 +394,8 @@ def _make_args_1d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs1D:
     return LevelArgs1D(part=part, axis=axes[0],
                        use_edge_dst=cfg.use_edge_dst,
                        local_mode=ops.local_mode, storage=cfg.storage,
-                       cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops)
+                       cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops,
+                       instrument=statics.instrument)
 
 
 register_decomposition(Decomposition(
@@ -319,7 +417,8 @@ def _make_args_1ds(part, cfg, ops, axes,
     return LevelArgs1DS(part=part, axis=axes[0], cap_x=statics.cap_x,
                         use_edge_dst=cfg.use_edge_dst,
                         local_mode=ops.local_mode, storage=cfg.storage,
-                        cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops)
+                        cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops,
+                        instrument=statics.instrument)
 
 
 def _validate_1ds(part, statics: PlanStatics) -> None:

@@ -34,6 +34,7 @@ validation.  The legacy ``make_*_bfs_fn`` builders and ``run_bfs``
 from __future__ import annotations
 
 import functools
+import re
 import time
 from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -202,7 +203,8 @@ def plan_for_part(part, cfg: BFSConfig, mesh, *,
                 f"{tuple(entry.axis_sizes(part))})")
     ops = get_local_ops(cfg.decomposition, local_mode, cfg.storage)
     statics = PlanStatics(cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
-                          cap_x=cap_x, n_real_edges=n_real_edges)
+                          cap_x=cap_x, n_real_edges=n_real_edges,
+                          instrument=cfg.instrument)
     entry.validate(part, statics)
     return BFSPlan(part=part, cfg=cfg, mesh=mesh, entry=entry, ops=ops,
                    axes=axes, statics=statics)
@@ -249,6 +251,30 @@ def plan_bfs(graph, cfg: BFSConfig, mesh, *,
 # Engine
 # ---------------------------------------------------------------------------
 
+# one collective instruction, in compiled HLO (`%x = <shape> op(...)`,
+# async collectives as op-start/op-done pairs — count the starts) or in
+# lowered StableHLO (`stablehlo.op"?(`)
+_COLLECTIVE_OP_RE = re.compile(
+    r"(?:=\s*[^=\n]*?\b(all-reduce|all-gather|all-to-all|reduce-scatter|"
+    r"collective-permute)(?:-start)?\()"
+    r"|(?:stablehlo\.(all_reduce|all_gather|all_to_all|reduce_scatter|"
+    r"collective_permute)\b)")
+
+
+def hlo_collective_counts(hlo: str) -> Dict[str, int]:
+    """Collective-op instruction counts per kind (hyphenated HLO names)
+    in an HLO or StableHLO text dump, plus a ``total``.  Used by the
+    perf-guard test and the bench trajectory to pin the collective
+    schedule of a program (counts are static program size, NOT dynamic
+    executions — while-loop bodies appear once, and both branches of a
+    conditional count even though one executes)."""
+    counts: Dict[str, int] = {}
+    for m in _COLLECTIVE_OP_RE.finditer(hlo):
+        kind = (m.group(1) or m.group(2)).replace("_", "-")
+        counts[kind] = counts.get(kind, 0) + 1
+    counts["total"] = sum(counts.values())
+    return counts
+
 
 class BFSEngine:
     """A compiled traversal session: graph shipped once, program
@@ -291,6 +317,19 @@ class BFSEngine:
 
     def _count_trace(self):
         self.trace_count += 1
+
+    @property
+    def instrument(self) -> bool:
+        """Whether the compiled search program carries the counter /
+        level_stats bookkeeping (plan-level; see BFSConfig.instrument).
+        False = the latency-lean fast path: one fused scalar reduction
+        per level, zero counters in the results."""
+        return self.plan.statics.instrument
+
+    def collective_counts(self) -> Dict[str, int]:
+        """Collective-op counts of the compiled single-root search (the
+        static schedule the fast path exists to shrink)."""
+        return hlo_collective_counts(self._exec.as_text())
 
     def _check_root(self, root) -> int:
         """Graphs are padded up to p*chunk vertices; a root in the padded

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import comm_model
 from repro.core.frontier import (INT_INF, expand_bitmap, pack_bits,
                                  test_bits, transpose_vector, unpack_bits)
 
@@ -52,6 +53,9 @@ class LevelArgs(NamedTuple):
     compact_updates: bool = False  # bottom-up: compact (child,parent) sends
     cap_u: int = 0            # compact updates capacity (0 = chunk//8)
     ops: "object" = None      # LocalOps entry (None = look up from strings)
+    instrument: bool = True   # False: compile out counters/level_stats
+    #                           (the latency-lean fast path; parents
+    #                           identical, ctr returned empty)
 
 
 def _resolve_ops(args: "LevelArgs"):
@@ -88,10 +92,13 @@ def _fold_bitmap(cand: jax.Array, pc: int, chunk: int, col_axis: str,
              return per-source winner bitmaps (again nr/64 words).
     Round 3: each source compacts the parent ids it won (static cap
              ``cap_w`` per destination chunk; overflow falls back to the
-             dense fold via lax.cond) and an all_to_all delivers them.
+             dense fold via lax.cond) and two all_to_alls deliver the
+             winner values + their local offsets.
 
-    Wire per level: 3*nr/64 + pc*cap_w words vs nr dense. With
-    cap_w = chunk/4: ~3.4x less fold traffic at pc=16."""
+    Wire per level (the ``comm_model.fold_bitmap_level_words`` closed
+    form): 2 bitmap rounds + 2 id exchanges = 2*nr/64 + 2*pc*cap_w words
+    per device, vs nr dense.  With cap_w = chunk/4: ~3.4x less fold
+    traffic at pc=16."""
     present = cand != INT_INF                         # (nr,)
     pb = pack_bits(present).reshape(pc, chunk // 32)
     # round 1: per-source presence bitmaps for each destination chunk
@@ -105,16 +112,20 @@ def _fold_bitmap(cand: jax.Array, pc: int, chunk: int, col_axis: str,
     wb = pack_bits(win_bits.reshape(-1)).reshape(pc, chunk // 32)
     back = lax.all_to_all(wb, col_axis, split_axis=0, concat_axis=0)
     my_wins = unpack_bits(back.reshape(-1)).reshape(pc, chunk)  # dest q
-    # round 3: compact won parent ids per destination chunk
+    # round 3: compact won parent ids per destination chunk.
+    # jnp.where(..., size=k) returns win positions in ASCENDING order
+    # (fills at the end), so the rank of a win within its destination
+    # chunk is its global position minus the win count of all earlier
+    # chunks — one cumsum over per-chunk counts, O(nr) on the hot fold
+    # path instead of the former argsort+searchsorted O(nr log nr).
     flat_wins = my_wins.reshape(-1)                           # (nr,)
-    idx = jnp.where(flat_wins, size=pc * cap_w, fill_value=-1)[0]
-    # per-destination compaction: rank of each win within its chunk
-    order = jnp.argsort(jnp.where(idx >= 0, idx, jnp.int32(2**30)),
-                        stable=True)
-    idx_s = idx[order]
+    idx_s = jnp.where(flat_wins, size=pc * cap_w, fill_value=-1)[0]
+    counts = jnp.sum(my_wins, axis=1)                         # per-dest wins
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
     q_s = jnp.where(idx_s >= 0, idx_s // chunk, pc)
-    rank = jnp.arange(idx_s.size, dtype=jnp.int32) - jnp.searchsorted(
-        q_s, q_s, side="left").astype(jnp.int32)
+    rank = (jnp.arange(idx_s.size, dtype=jnp.int32)
+            - starts[jnp.minimum(q_s, pc - 1)].astype(jnp.int32))
     ok = (idx_s >= 0) & (rank < cap_w)
     vals = jnp.where(ok, cand[jnp.maximum(idx_s, 0)], INT_INF)
     offs = jnp.where(ok, idx_s % chunk, chunk)                # local offset
@@ -152,22 +163,28 @@ def _fold_ring_reduce(cand: jax.Array, pc: int, chunk: int, col_axis: str):
 
 
 def topdown_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
-                  args: LevelArgs) -> Tuple[jax.Array, jax.Array, Dict]:
-    """One top-down level. g holds the local block arrays (squeezed)."""
+                  args: LevelArgs, lv=None
+                  ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """One top-down level. g holds the local block arrays (squeezed).
+    ``lv`` is the fast-path per-level context from ``_search_loop``
+    (unused by the 2D steps); with ``args.instrument`` False every
+    counter psum is compiled out and ``ctr`` comes back empty."""
     part = args.part
     pr, pc, chunk, nc, nr = part.pr, part.pc, part.chunk, part.nc, part.nr
     p = float(part.p)
-    ctr = zero_counters()
+    instr = args.instrument
+    ctr = zero_counters() if instr else {}
 
     # --- Expand: transpose + allgather along processor column ------------
     f_words, wire = expand_bitmap(front, args.perm,
                                   (args.row_axis, args.col_axis))
     f_cj = unpack_bits(f_words)                      # (nc,) bool
-    n_f = lax.psum(jnp.sum(front, dtype=jnp.float32),
-                   (args.row_axis, args.col_axis))
-    ctr["wire_transpose"] = jnp.float32(chunk / 64.0) * p
-    ctr["wire_expand"] = wire * p - ctr["wire_transpose"]
-    ctr["use_expand"] = n_f * (pr - 1)               # sparse ids, replicated
+    if instr:
+        n_f = lax.psum(jnp.sum(front, dtype=jnp.float32),
+                       (args.row_axis, args.col_axis))
+        ctr["wire_transpose"] = jnp.float32(chunk / 64.0) * p
+        ctr["wire_expand"] = wire * p - ctr["wire_transpose"]
+        ctr["use_expand"] = n_f * (pr - 1)           # sparse ids, replicated
 
     # --- Local discovery: SpMSV in the (select-source, min) semiring -----
     # format-specific work lives behind the LocalOps entry (CSR/DCSC x
@@ -176,17 +193,19 @@ def topdown_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
     col_offset = (j * nc).astype(jnp.int32)
     cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_cj, nr,
                                                 col_offset, args)
-    ctr["edges_examined"] = lax.psum(ex_local,
-                                     (args.row_axis, args.col_axis))
-    m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
-                           dtype=jnp.float32),
-                   (args.row_axis, args.col_axis))
-    ctr["edges_useful"] = m_f
+    if instr:
+        ctr["edges_examined"] = lax.psum(ex_local,
+                                         (args.row_axis, args.col_axis))
+        m_f = lax.psum(jnp.sum(jnp.where(front, g["deg_A"], 0),
+                               dtype=jnp.float32),
+                       (args.row_axis, args.col_axis))
+        ctr["edges_useful"] = m_f
 
     # --- Fold: exchange candidates along the processor row ---------------
     if args.fold_mode == "alltoall":
         t = _fold_alltoall(cand, pc, chunk, args.col_axis)
-        ctr["wire_fold"] = jnp.float32((pc - 1) * chunk) * p
+        if instr:
+            ctr["wire_fold"] = jnp.float32((pc - 1) * chunk) * p
     elif args.fold_mode in ("bitmap", "bitmap_pure"):
         cap_w = args.cap_w or max(chunk // 16, 32)
         t, my_wins = _fold_bitmap(cand, pc, chunk, args.col_axis, cap_w)
@@ -202,14 +221,18 @@ def topdown_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
                          lambda c: _fold_alltoall(c, pc, chunk,
                                                   args.col_axis),
                          lambda c: t, cand)
-        ctr["wire_fold"] = jnp.float32(
-            3 * (pc * chunk) / 64.0 + 2 * pc * cap_w) * p
+        if instr:
+            ctr["wire_fold"] = jnp.float32(
+                comm_model.fold_bitmap_level_words(pc * chunk, pc,
+                                                   cap_w)) * p
     else:
         t = _fold_ring_reduce(cand, pc, chunk, args.col_axis)
-        ctr["wire_fold"] = jnp.float32((pc - 1) * chunk) * p
-    n_cand = lax.psum(jnp.sum(cand != INT_INF, dtype=jnp.float32),
-                      (args.row_axis, args.col_axis))
-    ctr["use_fold"] = 2.0 * n_cand                   # (child, parent) pairs
+        if instr:
+            ctr["wire_fold"] = jnp.float32((pc - 1) * chunk) * p
+    if instr:
+        n_cand = lax.psum(jnp.sum(cand != INT_INF, dtype=jnp.float32),
+                          (args.row_axis, args.col_axis))
+        ctr["use_fold"] = 2.0 * n_cand               # (child, parent) pairs
 
     # --- Local update -----------------------------------------------------
     newly = (pi == -1) & (t != INT_INF)
@@ -223,33 +246,71 @@ def topdown_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
 
 
 def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
-                   args: LevelArgs) -> Tuple[jax.Array, jax.Array, Dict]:
+                   args: LevelArgs, lv=None
+                   ) -> Tuple[jax.Array, jax.Array, Dict]:
     """One bottom-up level: pc sub-steps with systolic rotation of the
-    completed bitmap along the processor row (Fig. 1)."""
+    completed bitmap along the processor row (Fig. 1).
+
+    The per-sub-step update exchange is BATCHED: sub-step s discovers
+    parents for the segment owned (layout A) by device (j-s) mod pc —
+    destination-disjoint by construction — so the segments accumulate in
+    a per-destination buffer and ONE tiled all_to_all delivers them at
+    level end, replacing pc-1 latency-bound ppermutes (plus, in compact
+    mode, pc-1 per-sub-step overflow pmaxes collapse to one).  The cseg
+    rotation ppermute is hoisted to the TOP of the next sub-step —
+    issued before the graph slicing and the Pallas scan — so an async
+    permute can overlap the local work; its payload (the previous
+    sub-step's completed|found bits) is unchanged.  Updates are applied
+    in the same s-order after the exchange; the carried completed bitmap
+    marks each vertex at its first discovery, so every vertex is
+    discovered by at most one sub-step and parents are bit-identical to
+    the per-sub-step exchange."""
     part = args.part
     pr, pc, chunk, nc, nr = part.pr, part.pc, part.chunk, part.nc, part.nr
     p = float(part.p)
     axes = (args.row_axis, args.col_axis)
-    ctr = zero_counters()
+    instr = args.instrument
+    ctr = zero_counters() if instr else {}
 
     # --- Gather frontier (dense bitmap; per level) ------------------------
     f_words, wire = expand_bitmap(front, args.perm, axes)
-    ctr["wire_transpose"] = jnp.float32(chunk / 64.0) * p
-    ctr["wire_expand"] = wire * p - ctr["wire_transpose"]
-    ctr["use_expand"] = jnp.float32(chunk / 64.0 * (1 + (pr - 1))) * p
+    if instr:
+        ctr["wire_transpose"] = jnp.float32(chunk / 64.0) * p
+        ctr["wire_expand"] = wire * p - ctr["wire_transpose"]
+        ctr["use_expand"] = jnp.float32(chunk / 64.0 * (1 + (pr - 1))) * p
 
     j = lax.axis_index(args.col_axis)
     cseg = pi != -1                       # completed = has parent (own chunk)
-    new_front = jnp.zeros_like(front)
-    new_pi = pi
 
     rot_perm = [(q, (q + 1) % pc) for q in range(pc)]
     edges_use = jnp.float32(0)
 
     col_offset = (j * nc).astype(jnp.int32)
     pure = args.fold_mode.endswith("_pure")
+    compact = args.compact_updates
+    cap_u = args.cap_u or max(chunk // 8, 32)
     ops = _resolve_ops(args)
+
+    # per-destination accumulation for the level-end batched exchange
+    # (compact mode never holds sub-step 0: the self segment pays no
+    # wire and must not be capacity-truncated — it rides the self slot)
+    if compact:
+        send_i = jnp.full((pc, cap_u), chunk, jnp.int32)
+        send_v = jnp.full((pc, cap_u), INT_INF, jnp.int32)
+    if (not compact) or (not pure):
+        send_d = jnp.full((pc, chunk), INT_INF, jnp.int32)
+    self_par = None
+    max_found = jnp.int32(0)
+    carry = None
+
     for s in range(pc):
+        if s > 0:
+            # hoisted rotation: issued ahead of this sub-step's slicing
+            # and local scan so the async permute overlaps them
+            cseg = unpack_bits(lax.ppermute(carry, args.col_axis, rot_perm))
+            if instr:
+                ctr["wire_rotate"] += jnp.float32(chunk / 64.0) * p
+                ctr["use_rotate"] += jnp.float32(chunk / 64.0) * p
         seg_id = (j - s) % pc             # segment V_{i, j-s} this sub-step
         e0 = lax.dynamic_index_in_dim(g["seg_ptr"], seg_id, keepdims=False)
         e1 = lax.dynamic_index_in_dim(g["seg_ptr"], seg_id + 1, keepdims=False)
@@ -264,54 +325,87 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
         seg_par = ops.bottomup(rp_seg, ue, f_words, cvec, col_offset,
                                n_edges, ve)
         found = seg_par != INT_INF
-        cseg = cseg | found
         row_lens = (rp_seg[1:] - rp_seg[:-1]).astype(jnp.float32)
-        edges_use += lax.psum(
-            jnp.sum(jnp.where(cvec == 0, row_lens, 0.0)), axes)
+        if instr:
+            edges_use += lax.psum(
+                jnp.sum(jnp.where(cvec == 0, row_lens, 0.0)), axes)
 
-        # Update parents: ship (child,parent) segment to its layout-A owner
-        upd_perm = [(q, (q - s) % pc) for q in range(pc)]
+        # Accumulate the update segment for its layout-A owner (the
+        # s=0 self segment never enters the buffers: it pays no wire
+        # and lands in the self slot after the exchange)
         if s == 0:
-            upd = seg_par
-        elif args.compact_updates:
-            # beyond-paper: ship only discovered (child, parent) pairs
-            # (static capacity; runtime fallback to the dense segment)
-            cap_u = args.cap_u or max(chunk // 8, 32)
-            cidx = jnp.where(found, size=cap_u,
-                             fill_value=chunk)[0].astype(jnp.int32)
-            cval = seg_par[jnp.minimum(cidx, chunk - 1)]
-            ridx = lax.ppermute(cidx, args.col_axis, upd_perm)
-            rval = lax.ppermute(cval, args.col_axis, upd_perm)
-            upd_c = jnp.full((chunk,), INT_INF, jnp.int32).at[ridx].min(
-                rval, mode="drop")
-            if pure:
-                upd = upd_c
-            else:
-                # global predicate: collectives in the branch are
-                # whole-mesh ops (group-local predicates deadlock)
-                over = lax.pmax(jnp.sum(found, dtype=jnp.int32),
-                                (args.row_axis, args.col_axis)) > cap_u
-                upd = lax.cond(
-                    over,
-                    lambda sp: lax.ppermute(sp, args.col_axis, upd_perm),
-                    lambda sp: upd_c, seg_par)
-            ctr["wire_updates"] += jnp.float32(2 * cap_u) * p
+            self_par = seg_par
         else:
-            upd = lax.ppermute(seg_par, args.col_axis, upd_perm)
-            ctr["wire_updates"] += jnp.float32(chunk) * p
+            if compact:
+                # beyond-paper: ship only discovered (child, parent)
+                # pairs (static capacity; level-end fallback to the
+                # dense segments)
+                cidx = jnp.where(found, size=cap_u,
+                                 fill_value=chunk)[0].astype(jnp.int32)
+                cval = seg_par[jnp.minimum(cidx, chunk - 1)]
+                send_i = lax.dynamic_update_slice(send_i, cidx[None],
+                                                  (seg_id, jnp.int32(0)))
+                send_v = lax.dynamic_update_slice(send_v, cval[None],
+                                                  (seg_id, jnp.int32(0)))
+                if not pure:
+                    max_found = jnp.maximum(
+                        max_found, jnp.sum(found, dtype=jnp.int32))
+                if instr:
+                    ctr["wire_updates"] += jnp.float32(2 * cap_u) * p
+            if (not compact) or (not pure):
+                send_d = lax.dynamic_update_slice(send_d, seg_par[None],
+                                                  (seg_id, jnp.int32(0)))
+            if instr and not compact:
+                ctr["wire_updates"] += jnp.float32(chunk) * p
+        if instr:
+            n_upd = lax.psum(jnp.sum(found, dtype=jnp.float32), axes)
+            ctr["use_updates"] += 2.0 * n_upd
+
+        # Mark discoveries in the carried bitmap; the rotation itself is
+        # issued at the top of the next sub-step (hoisted)
+        cseg = cseg | found
+        if s != pc - 1:
+            carry = pack_bits(cseg)
+
+    # --- Batched update exchange (one tiled all_to_all) -------------------
+    def _a2a(x):
+        return lax.all_to_all(x, args.col_axis, split_axis=0, concat_axis=0)
+
+    def _scatter_compact(si, sv):
+        # idx+val ride one exchange; sentinel idx == chunk drops
+        r = _a2a(jnp.concatenate([si, sv], axis=1))       # (pc, 2*cap_u)
+        rows = jnp.arange(pc, dtype=jnp.int32)[:, None]
+        return jnp.full((pc, chunk), INT_INF, jnp.int32).at[
+            rows, r[:, :cap_u]].min(r[:, cap_u:], mode="drop")
+
+    if compact and pure:
+        recv = _scatter_compact(send_i, send_v)
+    elif compact:
+        # global predicate: any sub-step's discoveries overflowing cap_u
+        # re-ships the whole level dense (the branch collectives are
+        # whole-mesh ops, so the predicate must be globally consistent)
+        over = lax.pmax(max_found, axes) > cap_u
+        recv = lax.cond(over,
+                        lambda b: _a2a(b[0]),
+                        lambda b: _scatter_compact(b[1], b[2]),
+                        (send_d, send_i, send_v))
+    else:
+        recv = _a2a(send_d)
+    # the self slot always carries sub-step 0's dense segment
+    recv = lax.dynamic_update_slice(recv, self_par[None], (j, jnp.int32(0)))
+
+    # --- Apply updates in sub-step order (source q ran sub-step (q-j)%pc
+    # for this chunk, so s-order application matches the old sequential
+    # per-sub-step semantics exactly) ---------------------------------------
+    new_front = jnp.zeros_like(front)
+    new_pi = pi
+    for s in range(pc):
+        upd = lax.dynamic_slice_in_dim(recv, (j + s) % pc, 1, axis=0)[0]
         newly = (upd != INT_INF) & (new_pi == -1)
         new_pi = jnp.where(newly, upd, new_pi)
         new_front = new_front | newly
-        n_upd = lax.psum(jnp.sum(found, dtype=jnp.float32), axes)
-        ctr["use_updates"] += 2.0 * n_upd
 
-        # Rotate completed to the right neighbor (packed on the wire)
-        if s != pc - 1:
-            cseg = unpack_bits(
-                lax.ppermute(pack_bits(cseg), args.col_axis, rot_perm))
-            ctr["wire_rotate"] += jnp.float32(chunk / 64.0) * p
-            ctr["use_rotate"] += jnp.float32(chunk / 64.0) * p
-
-    ctr["edges_useful"] = edges_use
-    ctr["edges_examined"] = edges_use
+    if instr:
+        ctr["edges_useful"] = edges_use
+        ctr["edges_examined"] = edges_use
     return new_pi, new_front, ctr

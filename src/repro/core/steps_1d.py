@@ -52,6 +52,7 @@ class LevelArgs1D(NamedTuple):
     cap_f: int = 0            # kernel csr: frontier capacity (0 = n)
     maxdeg: int = 0           # kernel mode: max column-segment length
     ops: "object" = None      # LocalOps entry (None = look up from strings)
+    instrument: bool = True   # False: compile out counters/level_stats
 
 
 def _resolve_ops(args: "LevelArgs1D"):
@@ -76,28 +77,34 @@ def expand_frontier_1d(front: jax.Array, axis: str):
 
 
 def topdown_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
-                     front: jax.Array, args: LevelArgs1D
+                     front: jax.Array, args: LevelArgs1D, lv=None
                      ) -> Tuple[jax.Array, jax.Array, Dict]:
-    """One 1D top-down level. g holds the strip arrays (squeezed)."""
+    """One 1D top-down level. g holds the strip arrays (squeezed).
+    ``lv`` is the fast-path per-level context (unused here); with
+    ``args.instrument`` False the level is ONE collective — the bitmap
+    allgather — and ``ctr`` comes back empty."""
     part = args.part
-    ctr = zero_counters()
+    instr = args.instrument
+    ctr = zero_counters() if instr else {}
 
     # --- Expand: allgather the frontier bitmap along the axis ------------
     f_words, wire = expand_frontier_1d(front, args.axis)
     f_all = unpack_bits(f_words)                     # (n,) bool
-    ctr["wire_expand"] = wire
-    n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
-    ctr["use_expand"] = n_f * (part.p - 1)           # sparse-id equivalent
+    if instr:
+        ctr["wire_expand"] = wire
+        n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
+        ctr["use_expand"] = n_f * (part.p - 1)       # sparse-id equivalent
 
     # --- Local discovery: SpMSV over the strip (global source ids, so
     # col_offset = 0; format-specific work lives in the LocalOps entry) --
     cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
                                                 part.chunk, jnp.int32(0),
                                                 args)
-    ctr["edges_examined"] = lax.psum(ex_local, args.axis)
-    ctr["edges_useful"] = lax.psum(
-        jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
-        args.axis)
+    if instr:
+        ctr["edges_examined"] = lax.psum(ex_local, args.axis)
+        ctr["edges_useful"] = lax.psum(
+            jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
+            args.axis)
 
     # --- Local update (children are owned; no fold) ----------------------
     newly = (pi == -1) & (cand != INT_INF)
@@ -106,19 +113,21 @@ def topdown_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
 
 
 def bottomup_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
-                      front: jax.Array, args: LevelArgs1D
+                      front: jax.Array, args: LevelArgs1D, lv=None
                       ) -> Tuple[jax.Array, jax.Array, Dict]:
     """One 1D bottom-up level: after the same frontier allgather, each
     processor scans its *unvisited* owned rows for an in-neighbor in the
     frontier — one sub-step, no rotation (the strip already holds every
     potential parent edge)."""
     part = args.part
-    ctr = zero_counters()
+    instr = args.instrument
+    ctr = zero_counters() if instr else {}
 
     f_words, wire = expand_frontier_1d(front, args.axis)
-    ctr["wire_expand"] = wire
-    ctr["use_expand"] = jnp.float32(
-        comm_model.expand_1d_level_words(part.n, part.p))
+    if instr:
+        ctr["wire_expand"] = wire
+        ctr["use_expand"] = jnp.float32(
+            comm_model.expand_1d_level_words(part.n, part.p))
 
     cvec = (pi != -1).astype(jnp.int32)
     ve = g["edge_dst"] if args.use_edge_dst and "edge_dst" in g else None
@@ -128,13 +137,14 @@ def bottomup_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
     newly = (pi == -1) & (seg_par != INT_INF)
     pi = jnp.where(newly, seg_par, pi)
 
-    row_lens = (g["row_ptr"][1:] - g["row_ptr"][:-1]).astype(jnp.float32)
-    edges_use = lax.psum(
-        jnp.sum(jnp.where(cvec == 0, row_lens, 0.0)), args.axis)
-    ctr["edges_examined"] = edges_use
-    ctr["edges_useful"] = edges_use
-    # parent updates are local in 1D: use_updates counts discoveries for
-    # Eq. 2 comparability, wire_updates stays 0
-    ctr["use_updates"] = 2.0 * lax.psum(
-        jnp.sum(newly, dtype=jnp.float32), args.axis)
+    if instr:
+        row_lens = (g["row_ptr"][1:] - g["row_ptr"][:-1]).astype(jnp.float32)
+        edges_use = lax.psum(
+            jnp.sum(jnp.where(cvec == 0, row_lens, 0.0)), args.axis)
+        ctr["edges_examined"] = edges_use
+        ctr["edges_useful"] = edges_use
+        # parent updates are local in 1D: use_updates counts discoveries
+        # for Eq. 2 comparability, wire_updates stays 0
+        ctr["use_updates"] = 2.0 * lax.psum(
+            jnp.sum(newly, dtype=jnp.float32), args.axis)
     return pi, newly, ctr

@@ -69,9 +69,11 @@ class LevelArgs1DS(NamedTuple):
     cap_f: int = 0            # kernel csr: frontier capacity (0 = n)
     maxdeg: int = 0           # kernel mode: max column-segment length
     ops: "object" = None      # LocalOps entry (None = look up from strings)
+    instrument: bool = True   # False: compile out counters/level_stats
 
 
-def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part):
+def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part,
+                       over=None, instrument: bool = True):
     """Owner-directed sparse frontier exchange with dense fallback.
 
     Each processor compacts its owned frontier chunk into a
@@ -88,16 +90,23 @@ def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part):
     the same branch and the collectives stay aligned — ids are never
     silently truncated).
 
+    ``over`` may be passed in pre-computed: the instrument=False fast
+    path folds the per-processor bucket-overflow indicator into the
+    PREVIOUS level's fused reduction (``decomp._search_loop``), so the
+    level itself spends no collective on the predicate.  When ``over``
+    is None it is derived here with a pmax (the instrumented path —
+    still globally consistent, the cond branches contain collectives).
+
     Returns (f_words uint32[n//32], wire f32 — live ids shipped on the
     sparse path (the modeled alltoallv volume; the padded buffer is
     ``comm_model.sparse_expand_padded_words``) or bitmap words on the
-    dense path, overflowed bool)."""
+    dense path (0 when not instrumented), overflowed bool)."""
     p = part.p
     i = lax.axis_index(axis)
-    n_local = jnp.sum(front, dtype=jnp.int32)
-    # global predicate: the cond branches contain collectives
-    over = lax.pmax(n_local, axis) > cap_x
-    n_f = lax.psum(n_local.astype(jnp.float32), axis)
+    if over is None:
+        n_local = jnp.sum(front, dtype=jnp.int32)
+        # global predicate: the cond branches contain collectives
+        over = lax.pmax(n_local, axis) > cap_x
 
     def sparse(f):
         ids = pack_ids(f, cap_x, i * part.chunk, part.n)
@@ -108,37 +117,48 @@ def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part):
         return lax.all_gather(pack_bits(f), axis, tiled=True)
 
     f_words = lax.cond(over, dense, sparse, front)
-    wire = jnp.where(
-        over,
-        jnp.float32(comm_model.expand_1d_level_words(part.n, p)),
-        jnp.float32(comm_model.sparse_expand_1d_words(n_f, p)))
+    wire = jnp.float32(0)
+    if instrument:
+        n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), axis)
+        wire = jnp.where(
+            over,
+            jnp.float32(comm_model.expand_1d_level_words(part.n, p)),
+            jnp.float32(comm_model.sparse_expand_1d_words(n_f, p)))
     return f_words, wire, over
 
 
 def topdown_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
-                      front: jax.Array, args: LevelArgs1DS
+                      front: jax.Array, args: LevelArgs1DS, lv=None
                       ) -> Tuple[jax.Array, jax.Array, Dict]:
     """One sparse-exchange 1D top-down level: identical to the dense 1D
-    level except the expand ships frontier ids (with bitmap fallback)."""
+    level except the expand ships frontier ids (with bitmap fallback).
+    ``lv`` (fast path only) carries the bucket-overflow predicate from
+    the previous level's fused reduction, so the instrument=False level
+    spends its collectives on the exchange alone."""
     part = args.part
-    ctr = zero_counters()
+    instr = args.instrument
+    ctr = zero_counters() if instr else {}
+    over = lv["over"] if lv is not None else None
 
     # --- Expand: owner-directed sparse ids, dense bitmap on overflow ----
-    f_words, wire, _ = sparse_exchange_1d(front, args.axis, args.cap_x, part)
+    f_words, wire, _ = sparse_exchange_1d(front, args.axis, args.cap_x,
+                                          part, over=over, instrument=instr)
     f_all = unpack_bits(f_words)                     # (n,) bool
-    ctr["wire_expand"] = wire
-    n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
-    ctr["use_expand"] = jnp.float32(
-        comm_model.sparse_expand_1d_words(n_f, part.p))
+    if instr:
+        ctr["wire_expand"] = wire
+        n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
+        ctr["use_expand"] = jnp.float32(
+            comm_model.sparse_expand_1d_words(n_f, part.p))
 
     # --- Local discovery: unchanged from "1d" (same LocalOps entries) ---
     cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
                                                 part.chunk, jnp.int32(0),
                                                 args)
-    ctr["edges_examined"] = lax.psum(ex_local, args.axis)
-    ctr["edges_useful"] = lax.psum(
-        jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
-        args.axis)
+    if instr:
+        ctr["edges_examined"] = lax.psum(ex_local, args.axis)
+        ctr["edges_useful"] = lax.psum(
+            jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),
+            args.axis)
 
     # --- Local update (children are owned; no fold) ----------------------
     newly = (pi == -1) & (cand != INT_INF)
@@ -147,13 +167,13 @@ def topdown_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
 
 
 def bottomup_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
-                       front: jax.Array, args: LevelArgs1DS
+                       front: jax.Array, args: LevelArgs1DS, lv=None
                        ) -> Tuple[jax.Array, jax.Array, Dict]:
     """Bottom-up levels always exchange the dense bitmap: the direction
     heuristic only enters bottom-up on large frontiers, where
     n_f*(p-1) id words would exceed the (p-1)*n/64 bitmap — reusing the
     "1d" step verbatim (the LevelArgs field names line up)."""
-    return bottomup_level_1d(g, pi, front, args)
+    return bottomup_level_1d(g, pi, front, args, lv)
 
 
 __all__ = ["LevelArgs1DS", "sparse_exchange_1d", "topdown_level_1ds",

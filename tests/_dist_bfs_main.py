@@ -272,6 +272,75 @@ def main():
             # levels past this root's own search stay empty
             assert (bp.level_stats[i][s.n_levels:, 0] == 0).all()
         print("OK podheur")
+    elif mode == "fastpath":
+        # instrument=False acceptance on 16 devices, all three
+        # decompositions: the latency-lean program (one fused scalar
+        # reduction per level, batched bottom-up update exchange,
+        # counters compiled out) must return bit-identical parents to
+        # the instrumented program and oracle-valid trees, including
+        # under direction switching and the compact-update exchange.
+        from repro.core.engine import plan_bfs
+        edges = rmat_graph(10, edge_factor=8, seed=9)
+        deg = edges.out_degrees()
+        roots = np.flatnonzero(deg > 0)[:3]
+        g1 = build_blocked_1d(edges, n_dev, align=32, cap_pad=32)
+        g2 = build_blocked(edges, 4, 4, align=32, cap_pad=32)
+        cases = [("1d", g1, make_local_mesh_1d(n_dev), {}),
+                 ("1ds", g1, make_local_mesh_1d(n_dev), {}),
+                 ("2d", g2, make_local_mesh(4, 4), {}),
+                 ("2d", g2, make_local_mesh(4, 4),
+                  {"fold_mode": "alltoall", "compact_updates": True})]
+        for decomp, g, mesh, kw in cases:
+            ref = plan_bfs(g, BFSConfig(decomposition=decomp, **kw),
+                           mesh).compile()
+            fast = plan_bfs(g, BFSConfig(decomposition=decomp,
+                                         instrument=False, **kw),
+                            mesh).compile()
+            # the fast program really is leaner: at most 2 all-reduces
+            # survive in the compiled search (the fused init + loop
+            # reductions; compact updates add their overflow pmax) vs
+            # the instrumented counter schedule
+            cf = fast.collective_counts()
+            ci = ref.collective_counts()
+            ar_budget = 3 if kw.get("compact_updates") else 2
+            assert cf.get("all-reduce", 0) <= ar_budget, (decomp, kw, cf)
+            assert cf["total"] < ci["total"], (decomp, kw, cf, ci)
+            for root in roots:
+                ri = ref.run(int(root))
+                rf = fast.run(int(root))
+                ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                           int(root), rf.parents)
+                assert ok, (decomp, kw, int(root), msg)
+                assert np.array_equal(rf.parents, ri.parents), (
+                    decomp, kw, int(root))
+                assert rf.n_levels == ri.n_levels, (decomp, kw, int(root))
+                assert all(v == 0.0 for v in rf.counters.values())
+
+        # pod-batched fast path: the fused lockstep pmax (and, for 2d,
+        # the sync_modes decision riding it as go_bu / 1-go_td) only
+        # executes under a pod axis — cross-check run_batch parents
+        # against the single-root fast program in both families
+        import jax
+        pair = roots[:2].astype(np.int32)
+        g2s = build_blocked(edges, 2, 2, align=32, cap_pad=32)
+        pods2d = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:8]).reshape(2, 2, 2),
+            ("pod", "data", "model"))
+        pods1d = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:8]).reshape(2, 4), ("pod", "data"))
+        g1s = build_blocked_1d(edges, 4, align=32, cap_pad=32)
+        for decomp, g, mesh in (("1ds", g1s, pods1d), ("2d", g2s, pods2d)):
+            eng = plan_bfs(g, BFSConfig(decomposition=decomp,
+                                        instrument=False), mesh).compile()
+            bp = eng.run_batch(pair)
+            for i, root in enumerate(pair):
+                single = eng.run(int(root))
+                ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                           int(root), bp.parents[i])
+                assert ok, ("batch", decomp, int(root), msg)
+                assert np.array_equal(bp.parents[i], single.parents), (
+                    "batch", decomp, int(root))
+        print("OK fastpath")
     elif mode == "multiroot":
         edges = rmat_graph(10, edge_factor=8, seed=9)
         rng = np.random.default_rng(0)

@@ -82,6 +82,49 @@ def test_engine_parity_matrix(fixed_graph):
         assert np.array_equal(res.level_stats, ref.level_stats), (dc, lm, st_)
 
 
+def test_instrument_off_parity_matrix(fixed_graph):
+    """The instrument=False fast path (one fused scalar reduction per
+    level, counters/level_stats compiled out) must return bit-identical
+    parents and level counts to the instrumented program in every
+    (decomposition, local_mode, storage) combo; its counters and stats
+    come back as zeros."""
+    e, g1, g2 = fixed_graph
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    for dc, lm, st_ in local_ops.registered_combos():
+        g = _graph_for(dc, g1, g2)
+        mesh = _mesh_for(dc)
+        ref = plan_bfs(g, BFSConfig(decomposition=dc, storage=st_), mesh,
+                       local_mode=lm).compile().run(root)
+        eng = plan_bfs(g, BFSConfig(decomposition=dc, storage=st_,
+                                    instrument=False),
+                       mesh, local_mode=lm).compile()
+        assert eng.instrument is False
+        res = eng.run(root)
+        assert np.array_equal(res.parents, ref.parents), (dc, lm, st_)
+        assert res.n_levels == ref.n_levels, (dc, lm, st_)
+        assert all(v == 0.0 for v in res.counters.values()), (dc, lm, st_)
+        assert not res.level_stats.any(), (dc, lm, st_)
+
+
+def test_instrument_off_direction_switching(fixed_graph):
+    """The fast path reads the direction heuristics off the previous
+    level's fused reduction — the mode sequence must still match the
+    instrumented program's level_stats (asserted via identical depths
+    AND identical level counts on a graph that actually switches)."""
+    e, g1, g2 = fixed_graph
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    for diro in (False, True):
+        cfg_i = BFSConfig(direction_optimizing=diro)
+        cfg_f = BFSConfig(direction_optimizing=diro, instrument=False)
+        ri = plan_bfs(g2, cfg_i, make_local_mesh(1, 1)).compile().run(root)
+        rf = plan_bfs(g2, cfg_f, make_local_mesh(1, 1)).compile().run(root)
+        assert np.array_equal(ri.parents, rf.parents), diro
+        assert ri.n_levels == rf.n_levels, diro
+    # with diropt the instrumented run really used bottom-up somewhere
+    modes = ri.level_stats[: ri.n_levels, 2]
+    assert modes.max() == 1.0
+
+
 # ---------------------------------------------------------------------------
 # Compile-once / ship-once
 # ---------------------------------------------------------------------------

@@ -56,3 +56,42 @@ def test_bottomup_words_matches_table1_structure():
     w = comm_model.bottomup_words(n, pr, pc, s_b)
     expect = n * (s_b * (pr + pc + 1) / 64 + 2)
     assert w == expect
+
+
+def test_fold_bitmap_words_closed_form():
+    """The bitmap fold is exactly 2 bitmap all_to_all rounds + 2 id
+    all_to_alls (values + offsets): 2*nr/64 + 2*pc*cap_w words per
+    device.  (The old counter charged a third bitmap round and the old
+    docstring dropped one id exchange.)"""
+    nr, pc, cap_w = 4096, 16, 64
+    w = comm_model.fold_bitmap_level_words(nr, pc, cap_w)
+    assert w == 2 * nr / 64 + 2 * pc * cap_w
+    # cheaper than the dense alltoall fold once cap_w << chunk
+    assert w < (pc - 1) * (nr // pc) * pc  # vs dense per-device * pc...
+    assert w < nr                          # vs the dense (pc-1)*chunk ~ nr
+
+
+def test_fold_bitmap_counter_matches_closed_form():
+    """The live wire_fold counter must reproduce the closed form: one
+    charge of p * fold_bitmap_level_words per top-down level."""
+    import numpy as np
+    from repro.configs.base import BFSConfig
+    from repro.core.bfs import run_bfs
+    from repro.graph.formats import build_blocked
+    from repro.graph.rmat import rmat_graph
+    from repro.launch.mesh import make_local_mesh
+
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    part = g.part
+    res = run_bfs(g, int(np.flatnonzero(e.out_degrees())[0]),
+                  BFSConfig(fold_mode="bitmap"), make_local_mesh(1, 1))
+    modes = res.level_stats[: res.n_levels, 2]
+    used = res.level_stats[: res.n_levels, 3]
+    n_td = int(((modes == 0) & (used > 0)).sum())
+    assert n_td > 0
+    cap_w = max(part.chunk // 16, 32)
+    want = n_td * part.p * comm_model.fold_bitmap_level_words(
+        part.pc * part.chunk, part.pc, cap_w)
+    assert abs(res.counters["wire_fold"] - want) <= 1e-5 * want, (
+        res.counters["wire_fold"], want)
