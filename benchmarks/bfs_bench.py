@@ -39,24 +39,36 @@ def run_worker(payload: Dict, n_devices: int = 16, timeout: int = 2400) -> Dict:
 _PHASES = ("wire_transpose", "wire_expand", "wire_fold", "wire_rotate",
            "wire_updates")
 
+# label -> worker payload: the "1ds" decomposition runs twice, once per
+# frontier codec, so the sweep measures the compressed-vs-raw-vs-dense
+# exchange crossover on the SAME graph
+_DECOMP_VARIANTS = (
+    ("1d", {"decomposition": "1d"}),
+    ("1ds-raw", {"decomposition": "1ds", "frontier_codec": "none"}),
+    ("1ds-packed", {"decomposition": "1ds", "frontier_codec": "packed"}),
+    ("2d", {"decomposition": "2d"}),
+)
+
 
 def sweep_decompositions(scale: int, grid, n_devices: int = 16,
                          roots: int = 4, out_json: Optional[str] = None,
                          **payload_kw) -> List[Dict]:
-    """Run the same R-MAT graph through all three decompositions on the
-    same device count (1d/1ds use p = pr*pc strips) and emit one CSV row
-    per decomposition with TEPS + per-phase wire counters — the measured
-    side of the paper's Eq. 2 comparison.  ``out_json`` additionally
-    dumps the rows plus the dense-vs-sparse expand-words crossover
-    artifact (``expand_words_artifact``) for CI."""
+    """Run the same R-MAT graph through every decomposition variant on
+    the same device count (1d/1ds use p = pr*pc strips; "1ds" runs both
+    raw-id and packed-codec exchanges) and emit one CSV row per variant
+    with TEPS + per-phase wire counters — the measured side of the
+    paper's Eq. 2 comparison.  ``out_json`` additionally dumps the rows
+    plus the compressed-vs-raw-vs-dense expand-words crossover artifact
+    (``expand_words_artifact``) for CI."""
     out = []
-    for decomp in ("1d", "1ds", "2d"):
+    for label, extra in _DECOMP_VARIANTS:
         res = run_worker({"scale": scale, "grid": list(grid),
-                          "roots": roots, "decomposition": decomp,
-                          **payload_kw}, n_devices=n_devices)
+                          "roots": roots, **extra, **payload_kw},
+                         n_devices=n_devices)
+        res["variant"] = label
         ctr = res["counters"] or {}
         phases = ";".join(f"{k}={ctr.get(k, 0.0):.3e}" for k in _PHASES)
-        emit(f"bfs_s{scale}_{decomp}_{grid[0]}x{grid[1]}",
+        emit(f"bfs_s{scale}_{label}_{grid[0]}x{grid[1]}",
              res["hmean_s"] * 1e6,
              f"teps={res['teps']:.3e};"
              f"compile_s={res.get('compile_s', 0.0):.3f};{phases}")
@@ -69,41 +81,70 @@ def sweep_decompositions(scale: int, grid, n_devices: int = 16,
     return out
 
 
+def _variant_key(row) -> str:
+    if row.get("variant"):
+        return row["variant"]
+    if row["decomposition"] == "1ds":
+        return ("1ds-raw" if row.get("frontier_codec") == "none"
+                else "1ds-packed")
+    return row["decomposition"]
+
+
 def expand_words_artifact(rows) -> Dict:
-    """The dense-vs-sparse 1D expand comparison from a
+    """The compressed-vs-raw-vs-dense 1D expand comparison from a
     ``sweep_decompositions`` run: per-level measured wire words for the
-    "1d" bitmap allgather and the "1ds" id exchange on the same graph,
-    the per-level dense closed form, and the crossover level — the first
-    level where the sparse exchange stops beating the bitmap (None if it
-    wins every level)."""
+    "1d" bitmap allgather and BOTH "1ds" id exchanges (raw 64-bit-word
+    ids vs the packed fixed-width codec) on the same graph, the
+    per-level closed forms, and each variant's crossover level — the
+    first level where that sparse exchange stops beating the bitmap
+    (None if it wins every level)."""
     if _SRC not in sys.path:           # CLI runs without PYTHONPATH=src
         sys.path.insert(0, _SRC)
     from repro.core import comm_model
-    by = {r["decomposition"]: r for r in rows}
-    d1, ds = by.get("1d"), by.get("1ds")
-    if not (d1 and ds):
+    by = {_variant_key(r): r for r in rows}
+    d1 = by.get("1d")
+    ref = by.get("1ds-packed") or by.get("1ds-raw")
+    if not (d1 and ref):
         return {}
-    n_pad, p = ds["n_pad"], ds["p"]
+    n_pad, p = ref["n_pad"], ref["p"]
+    bits = comm_model.codec_bits(n_pad // p)
     dense_level = comm_model.expand_1d_level_words(n_pad, p)
-    sparse = ds.get("levels_wire_expand") or []
-    crossover = next((i for i, w in enumerate(sparse) if w >= dense_level),
-                     None)
-    return {
-        "n_pad": n_pad, "p": p, "cap_x": ds.get("cap_x"),
+
+    def sparse_block(row, padded_model):
+        if not row:
+            return None
+        sparse = row.get("levels_wire_expand") or []
+        cap = row.get("cap_x") or 0
+        return {
+            "cap_x": cap,
+            # live words shipped per level (the modeled alltoallv
+            # volume); the static padded buckets cost the padded model
+            # a level whenever the sparse path runs
+            "padded_level_words_model": padded_model(cap),
+            "levels_wire_expand": sparse,
+            "levels_n_f": row.get("levels_n_f"),
+            "wire_expand_total": (row["counters"] or {}).get("wire_expand"),
+            "crossover_level": next(
+                (i for i, w in enumerate(sparse) if w >= dense_level), None),
+        }
+
+    raw = sparse_block(by.get("1ds-raw"),
+                       lambda c: comm_model.sparse_expand_padded_words(c, p))
+    packed = sparse_block(
+        by.get("1ds-packed"),
+        lambda c: comm_model.compressed_expand_padded_words(c, p, bits))
+    out = {
+        "n_pad": n_pad, "p": p, "codec_bits": bits,
         "dense_level_words_model": dense_level,
-        # live ids shipped per level (the modeled alltoallv volume); the
-        # static padded buckets cost sparse_padded_level_words_model a
-        # level whenever the sparse path runs
-        "sparse_padded_level_words_model":
-            comm_model.sparse_expand_padded_words(ds.get("cap_x") or 0, p),
         "dense_levels_wire_expand": d1.get("levels_wire_expand"),
-        "sparse_levels_wire_expand": sparse,
-        "sparse_levels_n_f": ds.get("levels_n_f"),
         "wire_expand_total_1d": (d1["counters"] or {}).get("wire_expand"),
-        "wire_expand_total_1ds": (ds["counters"] or {}).get("wire_expand"),
-        "topdown_1d_words_model": comm_model.topdown_1d_words(ds["m"], p),
-        "crossover_level": crossover,
+        "topdown_1d_words_model": comm_model.topdown_1d_words(ref["m"], p),
+        "raw": raw, "packed": packed,
     }
+    if raw and packed and raw["wire_expand_total"]:
+        out["packed_over_raw_total"] = (packed["wire_expand_total"]
+                                        / raw["wire_expand_total"])
+    return out
 
 
 def sweep_local_formats(scale: int, grid, n_devices: int = 16,
@@ -148,48 +189,58 @@ def sweep_local_formats(scale: int, grid, n_devices: int = 16,
 def bench_trajectory(scale: int = 14, grid=(4, 4), n_devices: int = 16,
                      roots: int = 2, degree: int = 4,
                      out_json: str = "BENCH_bfs.json") -> Dict:
-    """Seed/extend the bench trajectory: the pinned scale-14 / p=16
-    R-MAT config (the same graph family as the 16-device acceptance
-    tests) through all three decompositions, each compiled BOTH ways —
-    ``instrument=False`` (the latency-lean fast path the paper's
-    depth/time/TEPS runs use) and ``instrument=True`` (full counters).
-    Writes ``{traverse_s, TEPS, level_collectives}`` per decomposition
-    so future PRs diff traversal latency and the compiled collective
-    schedule against a pinned artifact."""
-    out = {"config": {"scale": scale, "degree": degree, "grid": list(grid),
-                      "n_devices": n_devices, "roots": roots},
-           "decompositions": {}}
-    for decomp in ("1d", "1ds", "2d"):
+    """Extend the bench trajectory: the pinned scale-14 / p=16 R-MAT
+    config (the same graph family as the 16-device acceptance tests)
+    through every decomposition variant ("1ds" both raw and packed),
+    each compiled BOTH ways — ``instrument=False`` (the latency-lean
+    fast path the paper's depth/time/TEPS runs use) and
+    ``instrument=True`` (full counters).  APPENDS one point to the
+    ``{"points": [...]}`` trajectory in ``out_json`` (auto-converting a
+    legacy single-point file), so future PRs diff traversal latency and
+    the compiled collective schedule against the whole history.
+    Returns the new point."""
+    point = {"config": {"scale": scale, "degree": degree,
+                        "grid": list(grid), "n_devices": n_devices,
+                        "roots": roots},
+             "decompositions": {}}
+    for label, extra in _DECOMP_VARIANTS:
         # ONE worker process builds both engines and interleaves the
         # timing (ABBA), so the comparison is not smeared by
         # process-level drift; ``traverse_s`` is the best-observed
         # per-root latency (forced-host-device runs are noisy)
         res = run_worker({"scale": scale, "grid": list(grid),
-                          "roots": roots, "degree": degree,
-                          "decomposition": decomp,
+                          "roots": roots, "degree": degree, **extra,
                           "compare_instrument": True},
                          n_devices=n_devices)
-        row = {}
-        for label in ("fast", "instrumented"):
-            b = res[label]
-            row[label] = {"traverse_s": b["hmean_s"],
-                          "traverse_min_s": b["min_s"],
-                          "teps": b["teps"],
-                          "level_collectives": b["hlo_collectives"],
-                          "compile_s": b.get("compile_s"),
-                          "times_s": b["times"]}
+        row = {"frontier_codec": res.get("frontier_codec")}
+        for mode in ("fast", "instrumented"):
+            b = res[mode]
+            row[mode] = {"traverse_s": b["hmean_s"],
+                         "traverse_min_s": b["min_s"],
+                         "teps": b["teps"],
+                         "level_collectives": b["hlo_collectives"],
+                         "compile_s": b.get("compile_s"),
+                         "times_s": b["times"]}
         row["speedup_fast"] = (row["instrumented"]["traverse_s"]
                                / row["fast"]["traverse_s"])
-        emit(f"bfs_traj_s{scale}_{decomp}_fast",
+        emit(f"bfs_traj_s{scale}_{label}_fast",
              row["fast"]["traverse_s"] * 1e6,
              f"teps={row['fast']['teps']:.3e};"
              f"collectives={row['fast']['level_collectives']['total']};"
              f"speedup_vs_instrumented={row['speedup_fast']:.3f}")
-        out["decompositions"][decomp] = row
+        point["decompositions"][label] = row
     if out_json:
+        points = []
+        if os.path.exists(out_json):
+            with open(out_json) as f:
+                prev = json.load(f)
+            # legacy schema: a bare single point (the PR 5 seed) — keep
+            # it as point 0 rather than overwriting history
+            points = prev["points"] if "points" in prev else [prev]
+        points.append(point)
         with open(out_json, "w") as f:
-            json.dump(out, f, indent=2)
-    return out
+            json.dump({"points": points}, f, indent=2)
+    return point
 
 
 def engine_timing_summary(rows) -> List[Dict]:
@@ -214,8 +265,9 @@ def engine_timing_summary(rows) -> List[Dict]:
 def _main():
     """CLI for the CI bench smoke: tiny-scale sweep_local_formats on
     forced host devices, CSV to stdout + JSON artifacts; ``--decomp-out``
-    additionally runs the three-way decomposition sweep and writes the
-    dense-vs-sparse expand-words crossover artifact."""
+    additionally runs the decomposition sweep (1d, 1ds raw, 1ds packed,
+    2d) and writes the compressed-vs-raw-vs-dense expand-words
+    crossover artifact."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=8)
@@ -228,13 +280,15 @@ def _main():
                     help="write the compile-vs-traverse split per combo "
                          "(engine path) as a JSON artifact")
     ap.add_argument("--decomp-out", default=None,
-                    help="also run the 1d/1ds/2d sweep_decompositions "
-                         "and write the dense-vs-sparse expand-words "
-                         "artifact to this path")
+                    help="also run the 1d/1ds(raw+packed)/2d "
+                         "sweep_decompositions and write the "
+                         "compressed-vs-raw-vs-dense expand-words "
+                         "crossover artifact to this path")
     ap.add_argument("--bench-out", default=None,
                     help="run bench_trajectory (instrumented-vs-fast on "
                          "the pinned scale-14/p=16 R-MAT config) and "
-                         "write BENCH_bfs.json-style rows to this path")
+                         "append one point to this BENCH_bfs.json-style "
+                         "trajectory file")
     ap.add_argument("--bench-scale", type=int, default=14,
                     help="override the pinned bench_trajectory scale")
     ap.add_argument("--bench-devices", type=int, default=16,

@@ -32,7 +32,9 @@ def main():
                     storage=payload.get("storage", "dcsc"),
                     fold_mode=payload.get("fold_mode", "reduce"),
                     direction_optimizing=payload.get("diropt", True),
-                    instrument=payload.get("instrument", True))
+                    instrument=payload.get("instrument", True),
+                    frontier_codec=payload.get("frontier_codec",
+                                               BFSConfig.frontier_codec))
     rng = np.random.default_rng(0)
     roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
 
@@ -103,6 +105,7 @@ def main():
         print(json.dumps({
             "m_input": edges.m_input, "m": edges.m, "n": edges.n,
             "n_pad": g.part.n, "p": g.part.p, "decomposition": decomp,
+            "frontier_codec": cfg.frontier_codec,
             "instrumented": block(eng, t_i), "fast": block(eng_f, t_f),
         }))
         return
@@ -138,6 +141,7 @@ def main():
         "cap_x": plan.statics.cap_x,
         "counters": counters, "decomposition": decomp,
         "instrument": cfg.instrument,
+        "frontier_codec": cfg.frontier_codec,
         # static collective schedule of the compiled search: the while
         # body appears once, so this is ~the per-level schedule plus
         # constant startup — the figure the fast path exists to shrink

@@ -232,6 +232,12 @@ class BFSConfig:
     instrument: bool = True
     use_edge_dst: bool = False    # bottom-up O(E) row read (no searchsorted)
     compact_updates: bool = False  # bottom-up compact (child,parent) sends
+    # "1ds" sparse-bucket encoding: "packed" bit-packs local offsets at
+    # codec_bits(chunk) bits each behind a count word (~3x fewer bucket
+    # bytes; kernels/frontier_codec), "none" ships raw i32 global ids.
+    # Parents are bit-identical; only wire volume and the planned cap_x
+    # crossover change.  Ignored by "1d"/"2d".
+    frontier_codec: str = "packed"
     rmat_a: float = 0.57
     rmat_b: float = 0.19
     rmat_c: float = 0.19

@@ -44,6 +44,11 @@ CONFIG_1D_DCSC = register(dataclasses.replace(
 # whose closed form is comm_model.topdown_1d_words
 CONFIG_1DS = register(dataclasses.replace(
     CONFIG_1D, arch="bfs-rmat-1ds", decomposition="1ds"))
+# raw-id buckets (frontier_codec="none"): the PR 5 wire baseline the
+# packed codec is measured against, and the config whose wire_expand
+# matches the uncompressed closed forms (sparse_expand_1d_words)
+CONFIG_1DS_RAW = register(dataclasses.replace(
+    CONFIG_1DS, arch="bfs-rmat-1ds-raw", frontier_codec="none"))
 
 # --- Latency-lean fast path (instrument=False): counters/level_stats
 # compiled out, one fused scalar reduction per level, batched bottom-up

@@ -43,7 +43,8 @@ def fold_bitmap_level_words(nr: int, pc: int, cap_w: int) -> float:
 
 def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
                             fold_mode: str = "alltoall",
-                            compact_updates: bool = False) -> int:
+                            compact_updates: bool = False,
+                            codec: str = "none") -> int:
     """Per-level collective-op budget of the ``instrument=False`` fast
     path, counted as collective ops in the LOWERED level body (both
     branches of a lax.cond count — StableHLO keeps them in the text
@@ -65,8 +66,15 @@ def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
       1d          : one bitmap allgather per level, nothing else
       1ds td      : sparse/dense allgather pair (one cond, 2 in text;
                     1 executes) — the overflow predicate rides the
-                    previous level's fused reduction
+                    previous level's fused reduction.  The packed codec
+                    (codec="packed") changes the BYTES on the wire, not
+                    the op count: the count word rides inside the same
+                    allgathered bucket buffer, so the budget is
+                    identical by construction and the guard pins that.
     """
+    if codec not in ("none", "packed"):
+        raise ValueError(f"no collective budget modeled for "
+                         f"codec={codec!r}")
     if decomposition == "2d":
         if mode == "td":
             folds = {"alltoall": 1, "reduce": max(pc - 1, 1),
@@ -114,14 +122,58 @@ def sparse_expand_1d_words(n_f, p):
     return n_f * (p - 1.0)
 
 
+def codec_bits(chunk: int) -> int:
+    """Fixed offset width of the packed ``"1ds"`` frontier codec: local
+    offsets live in [0, chunk), so ceil(log2(chunk)) bits each.  Static
+    — chunk is a partition constant — which is what lets encode/decode
+    be pure gathers (kernels/frontier_codec)."""
+    return max(1, int(chunk - 1).bit_length())
+
+
+def codec_packed_words(cap_x: int, bits: int) -> int:
+    """u32 words holding ``cap_x`` offsets bit-packed at ``bits`` each."""
+    return -((-cap_x * bits) // 32)
+
+
+def codec_bucket_words(cap_x: int, bits: int) -> int:
+    """Physical u32 words of one encoded bucket: 1 count word + the
+    packed payload.  The tiled allgather moves p of these per level."""
+    return 1 + codec_packed_words(cap_x, bits)
+
+
+def compressed_expand_1d_words(n_f, p, bits: int):
+    """Per-level wire of the PACKED sparse 1D exchange in the paper's
+    64-bit-word units: each of the ``n_f`` frontier ids costs ``bits``
+    bits instead of a 64-bit word, plus one u32 count word per bucket
+    from each of the p owners.  Everything is replicated to the other
+    p-1 processors.  Works on traced values (the live counter) and on
+    host floats (the model); the raw-id counterpart is
+    ``sparse_expand_1d_words``."""
+    return (p - 1.0) * (n_f * bits + 32.0 * p) / 64.0
+
+
+def compressed_expand_padded_words(cap_x: int, p: int, bits: int) -> float:
+    """Physical buffer volume of the packed static-shape exchange, in
+    64-bit words: p owners x (p-1) peers x the full encoded bucket
+    (``codec_bucket_words`` u32 = half that many paper words), sentinel
+    slots included.  Compare against ``sparse_expand_padded_words``
+    (whose i32 ids are likewise 1/2 paper word each, reported in id
+    units there) and the dense ``expand_1d_level_words``."""
+    return float(p) * (p - 1.0) * codec_bucket_words(cap_x, bits) / 2.0
+
+
 def hybrid_expand_1d_level_words(n_f_local_max: float, n_f: float, n: int,
-                                 p: int, cap_x: int) -> float:
+                                 p: int, cap_x: int,
+                                 bits: int = 0) -> float:
     """Overflow model for one ``"1ds"`` level: the sparse exchange ships
     ids while every per-processor bucket fits ``cap_x``; any overflow
     falls back to the dense bitmap for that level (the per-level hybrid,
-    mirroring the direction-optimizing switch)."""
+    mirroring the direction-optimizing switch).  ``bits > 0`` models the
+    packed codec on the sparse branch; 0 keeps raw 1-id-=-1-word ids."""
     if n_f_local_max > cap_x:
         return expand_1d_level_words(n, p)
+    if bits > 0:
+        return compressed_expand_1d_words(n_f, p, bits)
     return sparse_expand_1d_words(n_f, p)
 
 
@@ -138,22 +190,32 @@ def sparse_expand_padded_words(cap_x: int, p) -> float:
     return float(p) * (p - 1.0) * cap_x
 
 
-def plan_cap_x(n: int, p: int, m: int = 0, align: int = 32) -> int:
+def plan_cap_x(n: int, p: int, m: int, align: int = 32,
+               bits: int = 64) -> int:
     """Plan the ``"1ds"`` per-destination send-bucket capacity from the
     graph degree stats.  The dense bitmap costs (p-1)*n/64 words a level
-    while the sparse exchange costs n_f*(p-1), so sparse only wins while
-    the global frontier is under n/64 ids — n/(64p) per processor.  The
-    bucket cap bounds the PER-PROCESSOR frontier, so the degree-stat
-    headroom is the expected per-bucket level-1 load, (2m/n)/p on a
-    symmetrized graph (a whole level-1 frontier spreads over all p
-    owners); the ``align`` floor absorbs skew.  Capping at the
-    crossover keeps the planned hybrid within bucket granularity of the
-    per-level optimum: a fitting level ships at most p*cap_x*(p-1)
-    words — ~the dense bitmap volume once n >= 64*align*p — and levels
-    the sparse path cannot win overflow to the bitmap."""
+    while the sparse exchange costs n_f*bits/64*(p-1) (``bits`` = 64 for
+    raw ids, ``codec_bits(chunk)`` for the packed codec), so sparse only
+    wins while the global frontier is under n/bits ids — n/(bits*p) per
+    processor.  The bucket cap bounds the PER-PROCESSOR frontier, so the
+    degree-stat headroom is the expected per-bucket level-1 load,
+    (2m/n)/p on a symmetrized graph (a whole level-1 frontier spreads
+    over all p owners); the ``align`` floor absorbs skew.  Capping at
+    the crossover keeps the planned hybrid within bucket granularity of
+    the per-level optimum: a fitting level ships at most the dense
+    bitmap volume, and levels the sparse path cannot win overflow to the
+    bitmap.  ``m`` is required: planning without edge stats silently
+    collapses the headroom term, which is exactly the call-site bug this
+    signature exists to refuse."""
+    if m <= 0:
+        raise ValueError(
+            f"plan_cap_x needs the real edge count to size the level-1 "
+            f"headroom (got m={m}); thread PlanStatics.n_real_edges or "
+            f"graph.m from the call site")
     chunk = max(n // max(p, 1), 1)
-    d_avg = int(2.0 * m / n) if (m and n) else 0
-    cap = max(n // (64 * max(p, 1)), d_avg // max(p, 1) + 1, align)
+    d_avg = int(2.0 * m / n) if n else 0
+    cap = max(n // (max(bits, 1) * max(p, 1)), d_avg // max(p, 1) + 1,
+              align)
     cap = ((cap + align - 1) // align) * align
     return min(cap, ((chunk + align - 1) // align) * align)
 

@@ -96,9 +96,13 @@ class Decomposition:
     def graph_spec(self, axes: Tuple[str, ...]) -> P:
         return P(*axes)
 
-    def out_specs(self, axes: Tuple[str, ...]):
-        """(parents, level, counters, level_stats) specs."""
-        return (P(*axes), P(), {k: P() for k in COUNTER_KEYS}, P())
+    def out_specs(self, axes: Tuple[str, ...], instrument: bool = True):
+        """(parents, level, counters, level_stats) specs.  The fast path
+        carries NO counters at all ({} — matching _search_loop_fast):
+        uninstrumented runs must not emit zero-valued counters that read
+        as measurements in aggregates mixing modes."""
+        ctr = {k: P() for k in COUNTER_KEYS} if instrument else {}
+        return (P(*axes), P(), ctr, P())
 
     def batch_out_specs(self, axes: Tuple[str, ...], pod_axis: str):
         """(parents-per-root, levels, level_stats-per-root) specs for the
@@ -238,7 +242,9 @@ def _search_loop_fast(g, pi0, front0, *, n_total: float, cfg: BFSConfig,
     recomputes with separate psums at the top of L+1 — so the mode
     sequence and the parents are bit-identical to the instrumented
     program.  Counters and level_stats are compiled out; the returned
-    ctr/stats are constant zeros."""
+    ctr is EMPTY (a fast run has no measurements — zeros here would
+    masquerade as measured wire volumes downstream) and stats are
+    constant zeros."""
     deg = g["deg_A"]
 
     def reduce_state(pi, front):
@@ -292,8 +298,7 @@ def _search_loop_fast(g, pi0, front0, *, n_total: float, cfg: BFSConfig,
     st = (pi0, front0, jnp.int32(0), jnp.int32(0), n_sync0, gb0, gt0, ov0)
     pi, front, mode, level, n_sync, gb, gt, ov = lax.while_loop(
         cond, body, st)
-    return pi, level, zero_counters(), jnp.zeros((MAX_LEVELS, 5),
-                                                 jnp.float32)
+    return pi, level, {}, jnp.zeros((MAX_LEVELS, 5), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -418,7 +423,8 @@ def _make_args_1ds(part, cfg, ops, axes,
                         use_edge_dst=cfg.use_edge_dst,
                         local_mode=ops.local_mode, storage=cfg.storage,
                         cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops,
-                        instrument=statics.instrument)
+                        instrument=statics.instrument,
+                        codec=cfg.frontier_codec)
 
 
 def _validate_1ds(part, statics: PlanStatics) -> None:

@@ -128,7 +128,8 @@ class BFSPlan:
         mapped = shard_map(
             body, mesh=self.mesh,
             in_specs=(gspec, P()),
-            out_specs=self.entry.out_specs(self.axes),
+            out_specs=self.entry.out_specs(self.axes,
+                                           self.cfg.instrument),
             check_vma=False)   # pallas_call outputs carry no vma annotation
         return jax.jit(mapped)
 
@@ -201,6 +202,11 @@ def plan_for_part(part, cfg: BFSConfig, mesh, *,
                 f"mesh axis {ax!r} has size {mesh.shape[ax]} but the "
                 f"partition needs {want} (grid "
                 f"{tuple(entry.axis_sizes(part))})")
+    from repro.core.steps_1d_sparse import CODECS
+    if cfg.frontier_codec not in CODECS:
+        raise ValueError(
+            f"cfg.frontier_codec={cfg.frontier_codec!r} is not a "
+            f"registered frontier codec; have {CODECS}")
     ops = get_local_ops(cfg.decomposition, local_mode, cfg.storage)
     statics = PlanStatics(cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
                           cap_x=cap_x, n_real_edges=n_real_edges,
@@ -231,7 +237,12 @@ def plan_bfs(graph, cfg: BFSConfig, mesh, *,
             f"graph type {type(graph).__name__}")
     part = graph.part
     if cap_x <= 0:
-        cap_x = comm_model.plan_cap_x(part.n, part.p, int(graph.m))
+        # bits-aware: the packed codec cheapens each shipped id, moving
+        # the sparse/dense crossover out and admitting larger buckets
+        bits = comm_model.codec_bits(part.chunk) \
+            if cfg.frontier_codec == "packed" else 64
+        cap_x = comm_model.plan_cap_x(part.n, part.p, int(graph.m),
+                                      bits=bits)
     plan = plan_for_part(
         graph.part, cfg, mesh, row_axis=row_axis, col_axis=col_axis,
         local_mode=local_mode, cap_f=cap_f, cap_x=cap_x,

@@ -39,6 +39,29 @@ figure the variable-length exchange of the papers would put on the
 wire.  Local discovery is unchanged: the sparse exchange reconstructs
 the same packed frontier bitmap, so every "1d" LocalOps entry (dense
 edge-parallel, strip-CSR, strip-DCSC Pallas) plugs in as-is.
+
+Two pre-wire reductions from the literature sit on top:
+
+  * **Sieve** (arXiv 1208.5542): the owner masks already-visited
+    vertices out of its send set BEFORE packing, so a vertex never hits
+    the wire twice.  In this loop the frontier is freshly discovered
+    (``newly``), so the sieve removes nothing and parents stay
+    bit-identical — but the exchange no longer ASSUMES its input is
+    fresh: the overflow predicate, the packed count words, and the
+    dense-fallback bitmap all see the sieved set, so any future caller
+    with a stale or speculative frontier pays for live vertices only.
+  * **Codec** (arXiv 1704.00513 flavor): with ``codec="packed"`` the
+    bucket carries count-prefixed BIT-PACKED LOCAL OFFSETS instead of
+    raw i32 global ids — ``codec_bits(chunk)`` bits per id (~3x fewer
+    bucket bytes at chunk=1024), rebased by the receiver from the
+    bucket's position in the tiled allgather
+    (``kernels/frontier_codec``: Pallas encode/decode with a jnp
+    oracle).  ``wire_expand`` switches to the compressed closed form
+    ``comm_model.compressed_expand_1d_words`` on sparse levels;
+    ``use_expand`` stays in raw-id units so codecs are comparable.
+    The cheaper per-id wire also moves the sparse/dense crossover from
+    n_f ~ n/64 to n_f ~ n/bits, so ``plan_cap_x(bits=...)`` plans
+    LARGER buckets and more levels stay sparse.
 """
 from __future__ import annotations
 
@@ -54,12 +77,14 @@ from repro.core.frontier import (INT_INF, pack_bits, pack_ids, unpack_bits,
 from repro.core.steps import zero_counters
 from repro.core.steps_1d import bottomup_level_1d, _resolve_ops
 
+CODECS = ("none", "packed")
+
 
 class LevelArgs1DS(NamedTuple):
     """Static/per-search context for the sparse-exchange 1D steps.  The
     field set is a superset of LevelArgs1D (same names), so the dense
     bottom-up step and the "1d" LocalOps closures run against it
-    unchanged; ``cap_x`` is the only addition."""
+    unchanged; ``cap_x`` and ``codec`` are the only additions."""
     part: "object"            # Partition1D (static)
     axis: str                 # the single mesh axis name
     cap_x: int                # sparse exchange: ids per send bucket
@@ -70,25 +95,41 @@ class LevelArgs1DS(NamedTuple):
     maxdeg: int = 0           # kernel mode: max column-segment length
     ops: "object" = None      # LocalOps entry (None = look up from strings)
     instrument: bool = True   # False: compile out counters/level_stats
+    codec: str = "none"       # sparse-bucket encoding: "none" | "packed"
 
 
 def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part,
-                       over=None, instrument: bool = True):
+                       over=None, instrument: bool = True,
+                       visited=None, codec: str = "none",
+                       use_kernel: bool = False):
     """Owner-directed sparse frontier exchange with dense fallback.
 
     Each processor compacts its owned frontier chunk into a
-    fixed-capacity bucket of global ids (``pack_ids``) and broadcasts it
-    with one tiled all_gather; receivers scatter the ids back into the
-    full n-vertex packed bitmap (``unpack_ids``).  With the adjacency
+    fixed-capacity bucket (``pack_ids``) and broadcasts it with one
+    tiled all_gather; receivers scatter the ids back into the full
+    n-vertex packed bitmap (``unpack_ids``).  With the adjacency
     partitioned by DESTINATION, every strip can hold edges out of any
     frontier vertex, so a per-destination alltoall would carry p
     identical buckets — the allgather IS that exchange without
     materializing the copies (a genuinely filtered alltoall needs a
     source-partitioned format; see ROADMAP).  If any processor holds
-    more than ``cap_x`` frontier vertices the WHOLE level reverts to the
+    more than ``cap_x`` SEND vertices the WHOLE level reverts to the
     dense bitmap (the predicate is pmax-synced, so every device takes
     the same branch and the collectives stay aligned — ids are never
     silently truncated).
+
+    ``visited`` (optional bool[chunk]) is the owner-side sieve: vertices
+    already discovered are dropped from the send set before packing,
+    before the overflow count, and before the fallback bitmap — the
+    whole exchange operates on ``front & ~visited``.  Receivers union
+    the result into their view as usual, so sieving visited vertices
+    never changes discovery.
+
+    ``codec="packed"`` bit-packs the bucket (count word + local offsets
+    at ``codec_bits(chunk)`` bits each; ``kernels/frontier_codec``,
+    Pallas when ``use_kernel`` else the jnp oracle).  Same single
+    allgather — the count rides inside the buffer — so the collective
+    budget is unchanged; only the bytes shrink.
 
     ``over`` may be passed in pre-computed: the instrument=False fast
     path folds the per-processor bucket-overflow indicator into the
@@ -97,33 +138,59 @@ def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part,
     is None it is derived here with a pmax (the instrumented path —
     still globally consistent, the cond branches contain collectives).
 
-    Returns (f_words uint32[n//32], wire f32 — live ids shipped on the
-    sparse path (the modeled alltoallv volume; the padded buffer is
-    ``comm_model.sparse_expand_padded_words``) or bitmap words on the
-    dense path (0 when not instrumented), overflowed bool)."""
+    Returns (f_words uint32[n//32], wire, overflowed bool).  ``wire`` is
+    the modeled f32 words this level shipped — compressed or raw sparse
+    form per ``codec``, bitmap words on the dense path — or **None**
+    when ``instrument=False``: an uninstrumented exchange reports no
+    number at all rather than a fake 0 that would poison ``wire_expand``
+    aggregates mixing instrumented and fast levels."""
+    if codec not in CODECS:
+        raise ValueError(f"unknown frontier codec {codec!r}; "
+                         f"expected one of {CODECS}")
     p = part.p
     i = lax.axis_index(axis)
+    send = front if visited is None else front & ~visited
     if over is None:
-        n_local = jnp.sum(front, dtype=jnp.int32)
+        n_local = jnp.sum(send, dtype=jnp.int32)
         # global predicate: the cond branches contain collectives
         over = lax.pmax(n_local, axis) > cap_x
 
-    def sparse(f):
-        ids = pack_ids(f, cap_x, i * part.chunk, part.n)
-        recv = lax.all_gather(ids, axis, tiled=True)     # (p*cap_x,)
-        return unpack_ids(recv, part.n)
+    if codec == "packed":
+        from repro.kernels.frontier_codec import ops as codec_ops
+        from repro.kernels.frontier_codec import ref as codec_ref
+        enc = codec_ops.encode_offsets if use_kernel \
+            else codec_ref.encode_offsets
+        dec = (lambda r: codec_ops.decode_buckets(
+                   r, part.chunk, cap_x, part.n, p)) if use_kernel \
+            else (lambda r: codec_ref.decode_buckets(
+                      r, part.chunk, cap_x, part.n))
+
+        def sparse(f):
+            off = pack_ids(f, cap_x, 0, part.chunk)      # local offsets
+            buf = enc(off, jnp.sum(f, dtype=jnp.int32), part.chunk)
+            recv = lax.all_gather(buf, axis, tiled=True)  # (p*(1+W),)
+            return unpack_ids(dec(recv), part.n)
+    else:
+        def sparse(f):
+            ids = pack_ids(f, cap_x, i * part.chunk, part.n)
+            recv = lax.all_gather(ids, axis, tiled=True)  # (p*cap_x,)
+            return unpack_ids(recv, part.n)
 
     def dense(f):
         return lax.all_gather(pack_bits(f), axis, tiled=True)
 
-    f_words = lax.cond(over, dense, sparse, front)
-    wire = jnp.float32(0)
+    f_words = lax.cond(over, dense, sparse, send)
+    wire = None
     if instrument:
-        n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), axis)
+        n_f = lax.psum(jnp.sum(send, dtype=jnp.float32), axis)
+        sparse_words = comm_model.compressed_expand_1d_words(
+            n_f, p, comm_model.codec_bits(part.chunk)) \
+            if codec == "packed" \
+            else comm_model.sparse_expand_1d_words(n_f, p)
         wire = jnp.where(
             over,
             jnp.float32(comm_model.expand_1d_level_words(part.n, p)),
-            jnp.float32(comm_model.sparse_expand_1d_words(n_f, p)))
+            jnp.float32(sparse_words))
     return f_words, wire, over
 
 
@@ -134,15 +201,25 @@ def topdown_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
     level except the expand ships frontier ids (with bitmap fallback).
     ``lv`` (fast path only) carries the bucket-overflow predicate from
     the previous level's fused reduction, so the instrument=False level
-    spends its collectives on the exchange alone."""
+    spends its collectives on the exchange alone.
+
+    The sieve mask is ``(pi != -1) & ~front``: everything discovered on
+    EARLIER levels.  The frontier itself is excluded — its vertices also
+    have parents by now — so in-loop the sieve is the identity on
+    ``front`` and parents are bit-identical with it on or off; the
+    fast path's overflow count over ``front`` (decomp.reduce_state)
+    matches the sieved count for the same reason."""
     part = args.part
     instr = args.instrument
     ctr = zero_counters() if instr else {}
     over = lv["over"] if lv is not None else None
+    visited = (pi != -1) & ~front
 
     # --- Expand: owner-directed sparse ids, dense bitmap on overflow ----
-    f_words, wire, _ = sparse_exchange_1d(front, args.axis, args.cap_x,
-                                          part, over=over, instrument=instr)
+    f_words, wire, _ = sparse_exchange_1d(
+        front, args.axis, args.cap_x, part, over=over, instrument=instr,
+        visited=visited, codec=args.codec,
+        use_kernel=(args.local_mode == "kernel"))
     f_all = unpack_bits(f_words)                     # (n,) bool
     if instr:
         ctr["wire_expand"] = wire
@@ -176,5 +253,5 @@ def bottomup_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
     return bottomup_level_1d(g, pi, front, args, lv)
 
 
-__all__ = ["LevelArgs1DS", "sparse_exchange_1d", "topdown_level_1ds",
-           "bottomup_level_1ds"]
+__all__ = ["CODECS", "LevelArgs1DS", "sparse_exchange_1d",
+           "topdown_level_1ds", "bottomup_level_1ds"]

@@ -1,0 +1,101 @@
+"""Pallas TPU kernels: the "1ds" frontier codec (bit-packed offsets).
+
+Same math as the jnp oracle (ref.py) — count-prefixed fixed-width
+bit-packing of sorted local offsets — restructured for the VPU:
+
+  * Both directions are PER-BIT GATHERS with static shapes: packed bit b
+    is bit (b % bits) of offset b // bits.  No cross-word variable
+    shifts (every shift amount is < 32 by construction), no sequential
+    carry between words — each of the W output words is an independent
+    32-lane reduction, so encode vectorizes the way a delta-varint
+    stream never could.
+  * Encode runs as ONE program over the bucket (cap_x is small — the
+    planned crossover capacity, not the chunk); decode runs a grid
+    program per received bucket, rebasing offsets by the bucket's
+    owner index k * chunk and emitting the ``unpack_ids`` drop
+    sentinel ``n`` for slots past the bucket's count word.
+
+Blocks are VMEM-resident with SMEM scalars, ``interpret=True`` by
+default (CPU CI), matching kernels/bottomup.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.comm_model import codec_bits, codec_packed_words
+
+
+def _encode_kernel(count_ref, off_ref, out_ref, *, cap: int, bits: int,
+                   w: int):
+    count = jnp.minimum(count_ref[0].astype(jnp.uint32), jnp.uint32(cap))
+    slot = jnp.arange(cap, dtype=jnp.uint32)
+    v = jnp.where(slot < count, off_ref[...].astype(jnp.uint32),
+                  jnp.uint32(0))
+    b = jnp.arange(w * 32, dtype=jnp.uint32)
+    s = b // jnp.uint32(bits)
+    bit = (v[jnp.minimum(s, jnp.uint32(cap - 1))] >> (b % jnp.uint32(bits))
+           ) & jnp.uint32(1)
+    bit = jnp.where(s < cap, bit, jnp.uint32(0))
+    words = jnp.sum(bit.reshape(w, 32) << jnp.arange(32, dtype=jnp.uint32),
+                    axis=1, dtype=jnp.uint32)
+    out_ref[0] = count
+    out_ref[pl.ds(1, w)] = words
+
+
+def encode_offsets_kernel(off, count, chunk: int, *,
+                          interpret: bool = True):
+    """(cap,) i32 local offsets + scalar live count -> (1+W,) uint32
+    count-prefixed bit-packed bucket (W = ceil(cap*bits/32))."""
+    cap = off.shape[0]
+    bits = codec_bits(chunk)
+    w = codec_packed_words(cap, bits)
+    count = jnp.asarray(count, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, cap=cap, bits=bits, w=w),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # count scalar
+            pl.BlockSpec(off.shape, lambda: (0,)),        # offsets (VMEM)
+        ],
+        out_specs=pl.BlockSpec((1 + w,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1 + w,), jnp.uint32),
+        interpret=interpret,
+    )(count, off)
+
+
+def _decode_kernel(recv_ref, out_ref, *, cap: int, bits: int, w: int,
+                   chunk: int, n: int):
+    k = pl.program_id(0)
+    base = k * (1 + w)
+    count = recv_ref[base].astype(jnp.int32)
+    packed = recv_ref[pl.ds(base + 1, w)]
+    b = jnp.arange(cap * bits, dtype=jnp.uint32)              # slot-major
+    bit = (packed[b >> jnp.uint32(5)] >> (b & jnp.uint32(31))
+           ) & jnp.uint32(1)
+    t = jnp.arange(bits, dtype=jnp.uint32)
+    val = jnp.sum(bit.reshape(cap, bits) << t[None, :],
+                  axis=1).astype(jnp.int32)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    out_ref[pl.ds(k * cap, cap)] = jnp.where(
+        slot < count, k * chunk + val, jnp.int32(n))
+
+
+def decode_buckets_kernel(recv, chunk: int, cap: int, n: int, p: int, *,
+                          interpret: bool = True):
+    """(p*(1+W),) uint32 allgathered buckets -> (p*cap,) i32 global ids
+    (drop-sentinel ``n`` past each count), one grid program per bucket."""
+    bits = codec_bits(chunk)
+    w = codec_packed_words(cap, bits)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, cap=cap, bits=bits, w=w,
+                          chunk=chunk, n=n),
+        grid=(p,),
+        in_specs=[pl.BlockSpec(recv.shape, lambda k: (0,))],
+        out_specs=pl.BlockSpec((p * cap,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p * cap,), jnp.int32),
+        interpret=interpret,
+    )(recv.reshape(-1))

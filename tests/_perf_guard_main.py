@@ -97,7 +97,8 @@ def main():
         ("2d_compact", "2d", dict(fold_mode="alltoall",
                                   compact_updates=True)),
         ("1d", "1d", {}),
-        ("1ds", "1ds", {}),
+        ("1ds", "1ds", {}),                      # packed codec (default)
+        ("1ds_raw", "1ds", dict(frontier_codec="none")),
     ]
     for name, decomp, kw in cases:
         g = g2 if decomp == "2d" else g1

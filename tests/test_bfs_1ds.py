@@ -153,6 +153,39 @@ def test_sparse_exchange_closed_forms():
         == comm_model.expand_1d_level_words(n, p)
 
 
+def test_compressed_exchange_closed_forms():
+    n, p = 1 << 20, 16
+    chunk = n // p
+    bits = comm_model.codec_bits(chunk)
+    assert bits == 16 and comm_model.codec_bits(1024) == 10
+    assert comm_model.codec_bits(1) == 1  # degenerate chunk still packs
+    # bucket layout: count word + ceil(cap*bits/32) packed words
+    assert comm_model.codec_packed_words(32, 10) == 10
+    assert comm_model.codec_bucket_words(32, 10) == 11
+    # packed ids cost bits/64 of a raw id word, plus the count words
+    n_f = 1000.0
+    packed = comm_model.compressed_expand_1d_words(n_f, p, bits)
+    assert packed == (p - 1) * (n_f * bits + 32 * p) / 64
+    assert packed < comm_model.sparse_expand_1d_words(n_f, p)
+    # p=1 ships nothing in the compressed encoding either
+    assert comm_model.compressed_expand_1d_words(n_f, 1, bits) == 0.0
+    # the crossover moves out: sparse stays cheaper than the bitmap
+    # well past n/64 ids once each id costs only ``bits`` bits
+    above_raw_crossover = n / 64 * 2.0
+    assert comm_model.sparse_expand_1d_words(above_raw_crossover, p) \
+        > comm_model.expand_1d_level_words(n, p)
+    assert comm_model.compressed_expand_1d_words(
+        above_raw_crossover, p, bits) < comm_model.expand_1d_level_words(n, p)
+    # hybrid model takes the compressed form when bits are given
+    assert comm_model.hybrid_expand_1d_level_words(
+        10, n_f, n, p, 128, bits=bits) == packed
+    # padded-buffer form: p * (p-1) encoded buckets at 1/2 word per u32
+    assert comm_model.compressed_expand_padded_words(32, p, 10) \
+        == p * (p - 1) * 11 / 2
+    assert comm_model.compressed_expand_padded_words(32, p, 10) \
+        < comm_model.sparse_expand_padded_words(32, p)
+
+
 def test_plan_cap_x_bounds():
     n, p = 1 << 20, 16
     cap = comm_model.plan_cap_x(n, p, m=8 * n)
@@ -167,18 +200,42 @@ def test_plan_cap_x_bounds():
     assert p * comm_model.plan_cap_x(n, p, m=64 * n) <= max(n // 64, 32 * p)
     # never exceeds the owned chunk, even on tiny graphs
     assert comm_model.plan_cap_x(64, 2, m=1000) <= 32
+    # the m=0 default collapse is now a refused plan, not silent headroom
+    # loss (satellite bugfix): the degree-stat term needs real edges
+    with pytest.raises(ValueError, match="edge count"):
+        comm_model.plan_cap_x(n, p, m=0)
+    with pytest.raises(ValueError, match="edge count"):
+        comm_model.plan_cap_x(n, p, m=-5)
+    # bits-aware crossover: cheaper per-id wire admits larger buckets
+    bits = comm_model.codec_bits(n // p)
+    assert comm_model.plan_cap_x(n, p, m=8 * n, bits=bits) \
+        >= comm_model.plan_cap_x(n, p, m=8 * n)
+    assert abs(comm_model.plan_cap_x(n, p, m=8 * n, bits=bits)
+               - n // (bits * p)) <= 32
     # the static padded buffer form: p buckets to p-1 peers each
     assert comm_model.sparse_expand_padded_words(32, 16) == 16 * 15 * 32
     assert comm_model.sparse_expand_padded_words(32, 1) == 0.0
-    # engine planning: plan_bfs derives cap_x from the graph when unset
+    # engine planning: plan_bfs derives cap_x from the graph when unset,
+    # bits-aware under the default packed codec
     e = rmat_graph(8, edge_factor=8, seed=1)
     g = build_blocked_1d(e, 1, align=32, cap_pad=32)
     plan = plan_bfs(g, BFSConfig(decomposition="1ds"), make_local_mesh_1d(1))
-    assert plan.statics.cap_x \
+    assert plan.statics.cap_x == comm_model.plan_cap_x(
+        g.part.n, g.part.p, int(g.m),
+        bits=comm_model.codec_bits(g.part.chunk))
+    plan_raw = plan_bfs(g, BFSConfig(decomposition="1ds",
+                                     frontier_codec="none"),
+                        make_local_mesh_1d(1))
+    assert plan_raw.statics.cap_x \
         == comm_model.plan_cap_x(g.part.n, g.part.p, int(g.m))
     plan2 = plan_bfs(g, BFSConfig(decomposition="1ds"),
                      make_local_mesh_1d(1), cap_x=64)
     assert plan2.statics.cap_x == 64
+    # unknown codecs are refused at plan time, not deep in the step
+    with pytest.raises(ValueError, match="frontier codec"):
+        plan_bfs(g, BFSConfig(decomposition="1ds",
+                              frontier_codec="varint"),
+                 make_local_mesh_1d(1))
 
 
 def test_measured_wire_matches_sparse_model_single_device():

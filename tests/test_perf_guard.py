@@ -54,7 +54,14 @@ def test_fast_level_budgets(counts):
         "2d_compact": (budget("2d", "td", pc, "alltoall"),
                        budget("2d", "bu", pc, compact_updates=True)),
         "1d": (budget("1d", "td", p), budget("1d", "bu", p)),
-        "1ds": (budget("1ds", "td", p), budget("1ds", "bu", p)),
+        # the packed codec must not change the op count — the count word
+        # rides inside the same allgathered bucket buffer, so the packed
+        # ("1ds", the default) and raw ("1ds_raw") exchanges share one
+        # explicit budget
+        "1ds": (budget("1ds", "td", p, codec="packed"),
+                budget("1ds", "bu", p, codec="packed")),
+        "1ds_raw": (budget("1ds", "td", p, codec="none"),
+                    budget("1ds", "bu", p, codec="none")),
     }
     for name, (td_budget, bu_budget) in cases.items():
         fast = counts[name]["fast"]
@@ -72,7 +79,7 @@ def test_fast_search_single_fused_reduction(counts):
     """The fast whole-search program spends exactly one fused vector
     psum per level: 2 all-reduce ops in the program text (startup +
     while body), +1 for the compact-updates overflow pmax."""
-    for name in ("2d_alltoall", "2d_reduce", "1d", "1ds"):
+    for name in ("2d_alltoall", "2d_reduce", "1d", "1ds", "1ds_raw"):
         ar = counts[name]["fast"]["search"].get("all-reduce", 0)
         assert ar <= 2, (name, counts[name]["fast"]["search"])
     # the compact-update and bitmap-fold overflow pmaxes add one each
@@ -102,8 +109,15 @@ def test_instrumented_keeps_counter_reductions(counts):
     still pay their counter psums (if this drops to the fast-path
     count, the lowering DCE'd the counters and the budgets above are
     vacuous)."""
-    for name in ("2d_alltoall", "1d", "1ds"):
+    for name in ("2d_alltoall", "1d", "1ds", "1ds_raw"):
         inst = counts[name]["instrumented"]["td"]
         fast = counts[name]["fast"]["td"]
         assert inst.get("all-reduce", 0) >= 3, (name, inst)
         assert inst["total"] > fast["total"], (name, inst, fast)
+
+
+def test_packed_codec_same_schedule(counts):
+    """The codec compresses BYTES, not the schedule: packed and raw
+    "1ds" must lower to identical collective counts in every mode."""
+    assert counts["1ds"] == counts["1ds_raw"], (
+        counts["1ds"], counts["1ds_raw"])

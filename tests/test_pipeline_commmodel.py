@@ -95,3 +95,52 @@ def test_fold_bitmap_counter_matches_closed_form():
         part.pc * part.chunk, part.pc, cap_w)
     assert abs(res.counters["wire_fold"] - want) <= 1e-5 * want, (
         res.counters["wire_fold"], want)
+
+
+def test_uninstrumented_runs_carry_no_wire_counters():
+    """The satellite bugfix pin: an instrument=False run used to return
+    zero-valued counters — a "1ds" dense-fallback level's wire_expand
+    came back as a measured-looking 0.0, silently vanishing from
+    aggregates that mix fast and instrumented runs (sum(fast, inst)
+    == sum(inst), no error).  The fast path must now carry NO counters
+    at all, so mixing modes is a KeyError instead of a wrong number,
+    and the exchange helper itself reports wire=None uninstrumented."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import BFSConfig
+    from repro.core.bfs import run_bfs
+    from repro.core.compat import shard_map
+    from repro.core.steps_1d_sparse import sparse_exchange_1d
+    from repro.graph.formats import build_blocked_1d
+    from repro.graph.rmat import rmat_graph
+    from repro.launch.mesh import make_local_mesh_1d
+
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    mesh = make_local_mesh_1d(1)
+    fast = run_bfs(g, root, BFSConfig(decomposition="1ds",
+                                      instrument=False), mesh)
+    inst = run_bfs(g, root, BFSConfig(decomposition="1ds"), mesh)
+    assert fast.counters == {}
+    assert np.array_equal(fast.parents, inst.parents)
+    # the helper itself: wire is None (absent), never a fake 0.0 float
+    part = g.part
+    front = np.zeros((1, part.chunk), bool)
+    front[0, root] = True
+
+    def wire_of(instrument):
+        captured = {}
+
+        def body(f):
+            f_words, wire, over = sparse_exchange_1d(
+                f[0], "data", 32, part, instrument=instrument)
+            captured["wire"] = wire
+            return f_words[None]
+
+        shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                  out_specs=P("data"), check_vma=False)(front)
+        return captured["wire"]
+
+    assert wire_of(False) is None
+    assert wire_of(True) is not None
