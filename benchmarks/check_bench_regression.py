@@ -1,0 +1,73 @@
+"""Append-only bench-regression guard over BENCH_bfs.json.
+
+``BENCH_bfs.json`` accumulates one ``points`` entry per landed perf PR
+(benchmarks/bfs_bench.py --bench-out appends, never rewrites).  This
+guard compares the NEWEST point against the PREVIOUS one and fails when
+any decomposition+mode's best traversal time (``traverse_min_s``)
+regresses by more than the threshold (default 25% — wide enough for
+forced-host-device timing noise, tight enough to catch a real
+schedule regression).
+
+Variant names drift across points as the registry grows (point 0's
+"1ds" became "1ds-raw"/"1ds-packed" when the codec split landed), so
+only the (decomposition, mode) pairs present in BOTH points are
+compared — a renamed or newly added variant is not a regression.
+
+Run as:  python benchmarks/check_bench_regression.py [BENCH_bfs.json]
+Exit status 1 on regression; prints one line per comparison.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def _mins(point: dict) -> Dict[Tuple[str, str], float]:
+    """{(decomposition, mode): traverse_min_s} of one bench point."""
+    out = {}
+    for name, variant in point.get("decompositions", {}).items():
+        for mode in ("fast", "instrumented"):
+            t = variant.get(mode, {}).get("traverse_min_s")
+            if t is not None and t > 0:
+                out[(name, mode)] = float(t)
+    return out
+
+
+def check_points(data: dict, threshold: float = 0.25) -> List[str]:
+    """Regression messages comparing the newest point to the previous
+    one; empty when clean (or when fewer than 2 points exist — a fresh
+    trajectory has nothing to regress against)."""
+    points = data.get("points", [])
+    if len(points) < 2:
+        return []
+    prev, new = _mins(points[-2]), _mins(points[-1])
+    msgs = []
+    for key in sorted(set(prev) & set(new)):
+        ratio = new[key] / prev[key]
+        status = "REGRESSED" if ratio > 1.0 + threshold else "ok"
+        print(f"{key[0]}/{key[1]}: {prev[key]:.6f}s -> {new[key]:.6f}s "
+              f"({ratio:.3f}x) {status}")
+        if ratio > 1.0 + threshold:
+            msgs.append(
+                f"{key[0]}/{key[1]} regressed {ratio:.3f}x "
+                f"({prev[key]:.6f}s -> {new[key]:.6f}s, "
+                f"threshold {1.0 + threshold:.2f}x)")
+    return msgs
+
+
+def main(argv) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_bfs.json"
+    with open(path) as f:
+        data = json.load(f)
+    msgs = check_points(data)
+    if msgs:
+        for m in msgs:
+            print("FAIL:", m, file=sys.stderr)
+        return 1
+    print(f"bench guard clean over {len(data.get('points', []))} points")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -34,7 +34,8 @@ def main():
                     direction_optimizing=payload.get("diropt", True),
                     instrument=payload.get("instrument", True),
                     frontier_codec=payload.get("frontier_codec",
-                                               BFSConfig.frontier_codec))
+                                               BFSConfig.frontier_codec),
+                    expand_chunks=payload.get("expand_chunks", 1))
     rng = np.random.default_rng(0)
     roots = [random_source(edges, rng) for _ in range(payload.get("roots", 4))]
 
@@ -102,11 +103,41 @@ def main():
                     "compile_s": engine.compile_s,
                     "hlo_collectives": engine.collective_counts()}
 
+        # "chunk_sweep": additionally compile the software-pipelined
+        # fast engine per expand_chunks value, assert bit-identical
+        # parents against the unpipelined fast engine, and ABBA-time it
+        # against a resample of that baseline so chunked-vs-unchunked
+        # latency is compared under the same machine drift
+        chunked = {}
+        for ec in payload.get("chunk_sweep", []):
+            ec = int(ec)
+            plan_c = plan_bfs(g, dataclasses.replace(cfg, instrument=False,
+                                                     expand_chunks=ec),
+                              mesh, local_mode=local_mode,
+                              cap_f=payload.get("cap_f", 0),
+                              cap_x=payload.get("cap_x", 0))
+            eng_c = plan_c.compile()
+            eng_c.search(int(roots[0]))[0].block_until_ready()
+            for r in roots:
+                a = eng_f.to_result(eng_f.search(int(r)))
+                b = eng_c.to_result(eng_c.search(int(r)))
+                assert (a.parents == b.parents).all(), (ec, int(r))
+            t_c, t_b = [], []
+            for _ in range(int(payload.get("reps", 3))):
+                t_b += timed(eng_f)
+                t_c += timed(eng_c)
+                t_c += timed(eng_c)
+                t_b += timed(eng_f)
+            chunked[str(ec)] = {**block(eng_c, t_c),
+                                "baseline_resample_min_s": min(t_b)}
+
         print(json.dumps({
             "m_input": edges.m_input, "m": edges.m, "n": edges.n,
             "n_pad": g.part.n, "p": g.part.p, "decomposition": decomp,
             "frontier_codec": cfg.frontier_codec,
+            "expand_chunks": cfg.expand_chunks,
             "instrumented": block(eng, t_i), "fast": block(eng_f, t_f),
+            **({"chunked": chunked} if chunked else {}),
         }))
         return
 
@@ -142,6 +173,7 @@ def main():
         "counters": counters, "decomposition": decomp,
         "instrument": cfg.instrument,
         "frontier_codec": cfg.frontier_codec,
+        "expand_chunks": cfg.expand_chunks,
         # static collective schedule of the compiled search: the while
         # body appears once, so this is ~the per-level schedule plus
         # constant startup — the figure the fast path exists to shrink

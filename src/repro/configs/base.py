@@ -238,6 +238,18 @@ class BFSConfig:
     # Parents are bit-identical; only wire volume and the planned cap_x
     # crossover change.  Ignored by "1d"/"2d".
     frontier_codec: str = "packed"
+    # Software-pipelined level expand (default 1 = today's schedule).
+    # 1d/1ds: split the top-down frontier allgather into expand_chunks
+    # sub-chunk collectives, each consumed by local discovery while the
+    # next is in flight — same bytes, latency overlapped; must divide
+    # the per-strip bitmap extent (chunk/32 words; plan_bfs validates)
+    # and, for 1ds, the planned bucket capacity cap_x.  2d: any value
+    # > 1 switches the bottom-up systolic rotation to the pipelined R/G
+    # split ring (the completed-bitmap permute is issued ahead of the
+    # local scan; accumulated finds ride a second permute consumed only
+    # for the post-scan exactness filter).  Parents are bit-identical
+    # to expand_chunks=1 in every decomposition.
+    expand_chunks: int = 1
     rmat_a: float = 0.57
     rmat_b: float = 0.19
     rmat_c: float = 0.19

@@ -59,3 +59,15 @@ CONFIG_FAST = register(dataclasses.replace(
     CONFIG, arch="bfs-rmat-fast", instrument=False))
 CONFIG_1DS_FAST = register(dataclasses.replace(
     CONFIG_1DS, arch="bfs-rmat-1ds-fast", instrument=False))
+
+# --- Software-pipelined expand (expand_chunks > 1): the 1d/1ds top-down
+# gather split into chunks consumed while the next is in flight; the 2d
+# bottom-up ring pipelined via the R/G bitmap split (core/steps.py).
+# Parents are bit-identical to the unpipelined configs; expand_chunks
+# must divide the strip's packed word count (and cap_x for "1ds").
+CONFIG_PIPE = register(dataclasses.replace(
+    CONFIG_FAST, arch="bfs-rmat-pipe", expand_chunks=2))
+CONFIG_1D_PIPE = register(dataclasses.replace(
+    CONFIG_1D, arch="bfs-rmat-1d-pipe", instrument=False, expand_chunks=2))
+CONFIG_1DS_PIPE = register(dataclasses.replace(
+    CONFIG_1DS_FAST, arch="bfs-rmat-1ds-pipe", expand_chunks=4))

@@ -44,7 +44,8 @@ def fold_bitmap_level_words(nr: int, pc: int, cap_w: int) -> float:
 def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
                             fold_mode: str = "alltoall",
                             compact_updates: bool = False,
-                            codec: str = "none") -> int:
+                            codec: str = "none",
+                            expand_chunks: int = 1) -> int:
     """Per-level collective-op budget of the ``instrument=False`` fast
     path, counted as collective ops in the LOWERED level body (both
     branches of a lax.cond count — StableHLO keeps them in the text
@@ -62,8 +63,20 @@ def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
       2d bottom-up: transpose ppermute + allgather + (pc-1) hoisted
                     rotation ppermutes + ONE batched update all_to_all
                     (compact updates add 1 pmax + the dense-fallback
-                    all_to_all in the other cond branch)
-      1d          : one bitmap allgather per level, nothing else
+                    all_to_all in the other cond branch).  With
+                    ``expand_chunks > 1`` the systolic rotation is
+                    SOFTWARE-PIPELINED: the carried bitmap splits into a
+                    pure-rotation R chain (pre-level completed, issued
+                    ahead of the local scan with no data dependency on
+                    it) and a G chain of accumulated finds (consumed
+                    only at scan end for the exactness post-filter) —
+                    2(pc-1) ppermutes instead of pc-1, buying overlap
+                    with an extra latency-cheap permute per sub-step.
+      1d          : one bitmap allgather per level; ``expand_chunks=C``
+                    splits it into C pipelined sub-chunk allgathers
+                    (budget C), each consumed while the next is in
+                    flight — same total bytes
+                    (``chunked_expand_1d_level_words``).
       1ds td      : sparse/dense allgather pair (one cond, 2 in text;
                     1 executes) — the overflow predicate rides the
                     previous level's fused reduction.  The packed codec
@@ -71,10 +84,15 @@ def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
                     the op count: the count word rides inside the same
                     allgathered bucket buffer, so the budget is
                     identical by construction and the guard pins that.
+                    ``expand_chunks=C`` runs C sub-bucket exchanges per
+                    branch: budget 2C in text, C execute.
     """
     if codec not in ("none", "packed"):
         raise ValueError(f"no collective budget modeled for "
                          f"codec={codec!r}")
+    if expand_chunks < 1:
+        raise ValueError(f"no collective budget modeled for "
+                         f"expand_chunks={expand_chunks!r}")
     if decomposition == "2d":
         if mode == "td":
             folds = {"alltoall": 1, "reduce": max(pc - 1, 1),
@@ -84,9 +102,14 @@ def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
                                  f"fold_mode={fold_mode!r}")
             return 2 + folds[fold_mode]
         if mode == "bu":
-            return (pc - 1) + 3 + (2 if compact_updates else 0)
+            rot = (2 if expand_chunks > 1 else 1) * (pc - 1)
+            return rot + 3 + (2 if compact_updates else 0)
     if decomposition in ("1d", "1ds") and mode in ("td", "bu"):
-        return 2 if (decomposition == "1ds" and mode == "td") else 1
+        if decomposition == "1ds" and mode == "td":
+            return 2 * expand_chunks
+        if decomposition == "1d" and mode == "td":
+            return expand_chunks
+        return 1     # bottom-up always exchanges the one dense bitmap
     raise ValueError(f"no collective budget modeled for "
                      f"decomposition={decomposition!r} mode={mode!r}")
 
@@ -104,6 +127,27 @@ def expand_1d_level_words(n, p):
     counter (core/steps_1d.py, traced values) and the host-side closed
     forms both call it and cannot drift."""
     return (p - 1) * (n / 64.0)
+
+
+def chunked_expand_1d_level_words(n, p, n_chunks: int):
+    """Per-level wire of the CHUNKED (software-pipelined) dense 1D
+    expand: the one bitmap allgather splits into ``n_chunks`` sub-chunk
+    allgathers — each owner ships chunk/n_chunks bits per step, all
+    steps together exactly the chunk — so the total is IDENTICAL to the
+    single-gather schedule.  Chunking moves latency (overlap with the
+    per-sub-chunk SpMSV), not bytes; this form exists so the measured
+    ``wire_expand`` counter and the overlap artifact pin that invariant
+    rather than assume it.  ``n_chunks`` must divide the per-strip
+    bitmap extent (chunk/32 packed words) — the same constraint
+    ``plan_bfs`` validates."""
+    if n_chunks < 1:
+        raise ValueError(f"expand_chunks must be >= 1, got {n_chunks}")
+    chunk_words = (n // max(p, 1)) // 32
+    if chunk_words % n_chunks:
+        raise ValueError(
+            f"expand_chunks={n_chunks} does not divide the per-strip "
+            f"bitmap extent ({chunk_words} packed words)")
+    return expand_1d_level_words(n, p)
 
 
 def expand_1d_words(n: int, p: int, n_levels: int) -> float:
@@ -141,15 +185,22 @@ def codec_bucket_words(cap_x: int, bits: int) -> int:
     return 1 + codec_packed_words(cap_x, bits)
 
 
-def compressed_expand_1d_words(n_f, p, bits: int):
+def compressed_expand_1d_words(n_f, p, bits: int, n_chunks: int = 1):
     """Per-level wire of the PACKED sparse 1D exchange in the paper's
     64-bit-word units: each of the ``n_f`` frontier ids costs ``bits``
     bits instead of a 64-bit word, plus one u32 count word per bucket
     from each of the p owners.  Everything is replicated to the other
     p-1 processors.  Works on traced values (the live counter) and on
     host floats (the model); the raw-id counterpart is
-    ``sparse_expand_1d_words``."""
-    return (p - 1.0) * (n_f * bits + 32.0 * p) / 64.0
+    ``sparse_expand_1d_words``.
+
+    ``n_chunks > 1`` models the software-pipelined exchange: each owner
+    ships ``n_chunks`` sub-range buckets per level (one count word
+    each), with offsets packed at ``codec_bits(chunk / n_chunks)`` bits
+    — callers pass the narrower width.  Id bytes shrink, count-word
+    bytes grow n_chunks-fold; the raw codec and the dense fallback are
+    byte-identical to the unchunked schedule."""
+    return (p - 1.0) * (n_f * bits + 32.0 * p * n_chunks) / 64.0
 
 
 def compressed_expand_padded_words(cap_x: int, p: int, bits: int) -> float:

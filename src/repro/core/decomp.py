@@ -74,6 +74,10 @@ class PlanStatics:
     cap_f: int = 0            # kernel mode: frontier capacity (0 = nc)
     cap_x: int = 0            # 1ds sparse exchange: ids per send bucket
     n_real_edges: float = 0.0  # unpadded edge count (TEPS/metadata)
+    expand_chunks: int = 1    # software-pipelined expand: 1d/1ds chunk
+    #                           their top-down gather into this many
+    #                           overlapped steps; 2d pipelines the
+    #                           bottom-up ring (core/steps.py R/G split)
     instrument: bool = True   # False: compile counters/level_stats OUT
     #                           of the search program (the latency-lean
     #                           fast path; parents identical)
@@ -138,7 +142,7 @@ def registered_decompositions() -> Tuple[str, ...]:
 
 def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
                  sync, td_level, bu_level, sync_modes: bool = False,
-                 over_cap: int = 0):
+                 over_cap: int = 0, expand_chunks: int = 1):
     """Frontier-size / edge-mass direction heuristics, per-level stats,
     counter accumulation.  ``td_level`` / ``bu_level`` are
     (pi, front, lv=None) -> (pi, front, ctr) step closures over the
@@ -166,6 +170,9 @@ def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
     ``over_cap``: the "1ds" sparse-exchange bucket capacity; when > 0
     the fast path carries the per-processor overflow indicator in its
     fused reduction so the exchange step needs no predicate collective.
+    With ``expand_chunks`` > 1 the chunked exchange sends per-sub-range
+    buckets of capacity over_cap/expand_chunks, so the indicator tests
+    the per-sub-range counts instead of the whole-strip count.
 
     With ``cfg.instrument`` False the loop dispatches to
     ``_search_loop_fast``: one fused vector psum per level (plus one
@@ -177,7 +184,7 @@ def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
         return _search_loop_fast(
             g, pi0, front0, n_total=n_total, cfg=cfg, axes=axes, sync=sync,
             td_level=td_level, bu_level=bu_level, sync_modes=sync_modes,
-            over_cap=over_cap)
+            over_cap=over_cap, expand_chunks=expand_chunks)
     stats0 = jnp.zeros((MAX_LEVELS, 5), jnp.float32)
 
     def cond(st):
@@ -228,7 +235,7 @@ def _search_loop(g, gidx, root, *, n_total: float, cfg: BFSConfig, axes,
 
 def _search_loop_fast(g, pi0, front0, *, n_total: float, cfg: BFSConfig,
                       axes, sync, td_level, bu_level, sync_modes: bool,
-                      over_cap: int):
+                      over_cap: int, expand_chunks: int = 1):
     """The ``instrument=False`` level loop: the whole-search program
     spends exactly ONE fused vector psum per level — frontier size,
     frontier edge mass, unvisited edge mass, and (for the "1ds" hybrid)
@@ -250,8 +257,18 @@ def _search_loop_fast(g, pi0, front0, *, n_total: float, cfg: BFSConfig,
     def reduce_state(pi, front):
         """(n_f, m_f, m_u, over) from one stacked psum over the slice."""
         n_loc = jnp.sum(front, dtype=jnp.float32)
-        over_loc = ((n_loc > over_cap).astype(jnp.float32) if over_cap
-                    else jnp.float32(0))
+        if over_cap and expand_chunks > 1:
+            # chunked exchange: each of the expand_chunks contiguous
+            # sub-ranges gets its own over_cap/expand_chunks bucket, so
+            # ANY sub-range overflowing forces the dense fallback
+            cnts = jnp.sum(front.reshape(expand_chunks, -1), axis=1,
+                           dtype=jnp.float32)
+            over_loc = (jnp.max(cnts)
+                        > (over_cap // expand_chunks)).astype(jnp.float32)
+        elif over_cap:
+            over_loc = (n_loc > over_cap).astype(jnp.float32)
+        else:
+            over_loc = jnp.float32(0)
         red = lax.psum(jnp.stack([
             n_loc,
             jnp.sum(jnp.where(front, deg, 0), dtype=jnp.float32),
@@ -340,7 +357,8 @@ def _make_args_2d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs:
                      cap_f=statics.cap_f, maxdeg=statics.maxdeg,
                      use_edge_dst=cfg.use_edge_dst,
                      compact_updates=cfg.compact_updates, ops=ops,
-                     instrument=statics.instrument)
+                     instrument=statics.instrument,
+                     expand_chunks=statics.expand_chunks)
 
 
 def _validate_2d(part, statics: PlanStatics) -> None:
@@ -385,8 +403,10 @@ def _make_strip_body(td_step, bu_step):
             td_level=lambda pi, f, lv=None: td_step(g, pi, f, args, lv),
             bu_level=lambda pi, f, lv=None: bu_step(g, pi, f, args, lv),
             # "1ds": the fast path carries the bucket-overflow indicator
-            # in its fused reduction (0 disables it for plain "1d")
-            over_cap=getattr(args, "cap_x", 0))
+            # in its fused reduction (0 disables it for plain "1d");
+            # expand_chunks switches it to per-sub-range bucket counts
+            over_cap=getattr(args, "cap_x", 0),
+            expand_chunks=getattr(args, "expand_chunks", 1))
         return pi[None], level, ctr, stats
 
     return body
@@ -400,14 +420,33 @@ def _make_args_1d(part, cfg, ops, axes, statics: PlanStatics) -> LevelArgs1D:
                        use_edge_dst=cfg.use_edge_dst,
                        local_mode=ops.local_mode, storage=cfg.storage,
                        cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops,
-                       instrument=statics.instrument)
+                       instrument=statics.instrument,
+                       expand_chunks=statics.expand_chunks)
+
+
+def _validate_strip_chunks(part, statics: PlanStatics) -> None:
+    """Shared 1d/1ds check: the chunked expand splits the owner's packed
+    bitmap words (chunk/32 of them) into expand_chunks equal sub-chunks,
+    so the word count must divide evenly — a ragged last sub-chunk would
+    silently mis-align the owner-major gather layout."""
+    c = statics.expand_chunks
+    words = part.chunk // 32
+    if c > 1 and words % c != 0:
+        raise ValueError(
+            f"expand_chunks={c} does not divide the per-device strip's "
+            f"packed word count ({words} = chunk {part.chunk} / 32); "
+            f"pick a divisor of {words}")
+
+
+def _validate_1d(part, statics: PlanStatics) -> None:
+    _validate_strip_chunks(part, statics)
 
 
 register_decomposition(Decomposition(
     name="1d", partition_cls=Partition1D, graph_cls=Blocked1DGraph,
     n_axes=1, axis_sizes=lambda part: (part.p,),
     make_level_args=_make_args_1d, body=_bfs_body_1d,
-    validate=lambda part, statics: None))
+    validate=_validate_1d))
 
 
 # ---------------------------------------------------------------------------
@@ -424,7 +463,8 @@ def _make_args_1ds(part, cfg, ops, axes,
                         local_mode=ops.local_mode, storage=cfg.storage,
                         cap_f=statics.cap_f, maxdeg=statics.maxdeg, ops=ops,
                         instrument=statics.instrument,
-                        codec=cfg.frontier_codec)
+                        codec=cfg.frontier_codec,
+                        expand_chunks=statics.expand_chunks)
 
 
 def _validate_1ds(part, statics: PlanStatics) -> None:
@@ -440,6 +480,13 @@ def _validate_1ds(part, statics: PlanStatics) -> None:
             f"cap_x={statics.cap_x} exceeds the owned chunk "
             f"({part.chunk}) — a bucket can never hold more frontier "
             f"ids than a processor owns")
+    _validate_strip_chunks(part, statics)
+    c = statics.expand_chunks
+    if c > 1 and statics.cap_x % c != 0:
+        raise ValueError(
+            f"expand_chunks={c} does not divide cap_x={statics.cap_x}; "
+            f"the chunked sparse exchange splits the send bucket into "
+            f"expand_chunks equal sub-buckets")
 
 
 register_decomposition(Decomposition(

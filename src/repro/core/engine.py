@@ -207,10 +207,15 @@ def plan_for_part(part, cfg: BFSConfig, mesh, *,
         raise ValueError(
             f"cfg.frontier_codec={cfg.frontier_codec!r} is not a "
             f"registered frontier codec; have {CODECS}")
+    if cfg.expand_chunks < 1:
+        raise ValueError(
+            f"cfg.expand_chunks={cfg.expand_chunks} must be >= 1 "
+            f"(1 = unpipelined expand)")
     ops = get_local_ops(cfg.decomposition, local_mode, cfg.storage)
     statics = PlanStatics(cap_seg=cap_seg, maxdeg=maxdeg, cap_f=cap_f,
                           cap_x=cap_x, n_real_edges=n_real_edges,
-                          instrument=cfg.instrument)
+                          instrument=cfg.instrument,
+                          expand_chunks=cfg.expand_chunks)
     entry.validate(part, statics)
     return BFSPlan(part=part, cfg=cfg, mesh=mesh, entry=entry, ops=ops,
                    axes=axes, statics=statics)

@@ -60,6 +60,16 @@ class LocalOps:
     topdown: Callable             # SpMSV closure (see module docstring)
     bottomup: Callable            # bottom-up sub-step closure
     storage_words: Callable       # (graph) -> Dict[str, int], §5.1 words
+    # Optional per-chunk SpMSV for the software-pipelined 1d/1ds expand
+    # (expand_chunks > 1): consumes ONE raw gathered sub-chunk buffer
+    # (owner-major (p * w_sub,) u32 words) without materializing the
+    # full-size frontier bitmap.  Signature:
+    #   topdown_chunk(g, g_sub, k, n_chunks, nr, col_offset, args)
+    #       -> (cand (nr,) i32, edges_examined_local f32)
+    # Entries without one fall back to scattering the sub-chunk into a
+    # full-size partial bitmap and calling ``topdown`` (exact either
+    # way: candidates min-combine across chunks).
+    topdown_chunk: Callable = None
 
 
 _REGISTRY: Dict[Tuple[str, str, str], LocalOps] = {}
@@ -153,6 +163,42 @@ def _td_strip_dcsc(g, f_words, f_mask, nr, col_offset, args):
     return cand, _dcsc_edges_examined(g["jc"], g["cp"], g["nzc"], f_mask)
 
 
+def _dcsc_edges_examined_chunk(jc, cp, nzc, g_sub, k, n_chunks, chunk, n):
+    """Frontier-column segment-length sum for ONE pipelined sub-chunk:
+    bitmap-tests each column id against the raw owner-major sub-chunk
+    buffer (no full-size bitmap), so the per-chunk sums add up exactly
+    to the unchunked ``_dcsc_edges_examined``."""
+    wpc = chunk // 32
+    w_sub = wpc // n_chunks
+    slot = jnp.arange(jc.shape[0])
+    uc = jnp.minimum(jc, n - 1)
+    wi = uc >> 5
+    owner = wi // wpc
+    lw = wi - owner * wpc
+    in_rng = (lw >= k * w_sub) & (lw < (k + 1) * w_sub)
+    pos = jnp.where(in_rng, owner * w_sub + (lw - k * w_sub), 0)
+    bit = ((g_sub[pos] >> (uc.astype(jnp.uint32) & jnp.uint32(31)))
+           & jnp.uint32(1)) == 1
+    live = (slot < nzc) & (jc < n) & in_rng & bit
+    return jnp.sum(jnp.where(live, cp[1:] - cp[:-1], 0), dtype=jnp.float32)
+
+
+def _td_strip_dcsc_chunk(g, g_sub, k, n_chunks, nr, col_offset, args):
+    """Per-chunk entry of the strip SpMSV for the software-pipelined
+    expand: the Pallas kernel consumes the raw gathered sub-chunk buffer
+    directly (kernels/spmsv/strip.py chunk entry point); the caller
+    min-combines candidates across chunks."""
+    from repro.kernels.spmsv import ops as spmsv_ops
+    part = args.part
+    ridx = jnp.pad(g["row_idx"], (0, 256))
+    cand = spmsv_ops.spmsv_strip_dcsc_chunk(
+        g["jc"], g["cp"], g["nzc"], ridx, g_sub, nr, n=part.n, p=part.p,
+        k=k, n_chunks=n_chunks, maxdeg=args.maxdeg)
+    ex = _dcsc_edges_examined_chunk(g["jc"], g["cp"], g["nzc"], g_sub, k,
+                                    n_chunks, part.chunk, part.n)
+    return cand, ex
+
+
 # ---------------------------------------------------------------------------
 # Bottom-up sub-step closures
 # ---------------------------------------------------------------------------
@@ -224,7 +270,7 @@ register_local_ops(LocalOps(
 register_local_ops(LocalOps(
     decomposition="1d", local_mode="kernel", storage="dcsc",
     keys=_KERNEL_DCSC_KEYS_1D, topdown=_td_strip_dcsc, bottomup=_bu_kernel,
-    storage_words=_words("dcsc")))
+    storage_words=_words("dcsc"), topdown_chunk=_td_strip_dcsc_chunk))
 
 # "1ds" (sparse-exchange 1D, core/steps_1d_sparse.py) traverses the same
 # row strips with the same local kernels — only the expand collective

@@ -56,6 +56,10 @@ class LevelArgs(NamedTuple):
     instrument: bool = True   # False: compile out counters/level_stats
     #                           (the latency-lean fast path; parents
     #                           identical, ctr returned empty)
+    # > 1 switches the bottom-up systolic rotation to the software-
+    # pipelined R/G split ring (see bottomup_level); the value itself is
+    # a toggle for 2D — the chunk count only shapes the 1d/1ds expand
+    expand_chunks: int = 1
 
 
 def _resolve_ops(args: "LevelArgs"):
@@ -264,7 +268,27 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
     in the same s-order after the exchange; the carried completed bitmap
     marks each vertex at its first discovery, so every vertex is
     discovered by at most one sub-step and parents are bit-identical to
-    the per-sub-step exchange."""
+    the per-sub-step exchange.
+
+    With ``args.expand_chunks > 1`` the rotation is fully SOFTWARE-
+    PIPELINED (the generalization of the hoist above): the carried
+    bitmap splits into two chains so the permute no longer waits on the
+    scan.  The **R chain** is a pure rotation of the PRE-LEVEL completed
+    bitmap — its payload exists at sub-step start, so the ppermute has
+    no data dependency on the local scan and overlaps it.  The **G
+    chain** accumulates this level's finds (G after sub-step s =
+    G_before | F_s, rotated alongside R) on a second ppermute whose
+    result is consumed only AFTER the scan, as the exactness
+    post-filter: the scan runs against the stale R-only bitmap
+    (re-scanning rows discovered earlier this level), then
+    ``found &= ~G`` masks those re-discoveries out.  Per-row scan
+    results are independent of other rows' cvec, so the filtered result
+    is bit-identical to the exact-bitmap scan; the instrumented edges
+    counter is computed from the exact ``R | G`` union so counters
+    match the classic schedule too.  Cost: 2(pc-1) ppermutes per level
+    instead of pc-1 (``wire_rotate`` doubles; ``use_rotate`` — the
+    semantic payload — does not), bought for the scan-latency overlap
+    (``comm_model.level_collective_budget``)."""
     part = args.part
     pr, pc, chunk, nc, nr = part.pr, part.pc, part.chunk, part.nc, part.nr
     p = float(part.p)
@@ -302,15 +326,37 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
     self_par = None
     max_found = jnp.int32(0)
     carry = None
+    pipelined = args.expand_chunks > 1
+    if pipelined:
+        # R/G split ring: R (in ``carry``) rotates the pre-level
+        # completed bitmap — a payload with no scan dependency — while
+        # g_acc carries the accumulated this-level finds for the
+        # post-scan filter.
+        carry = pack_bits(cseg)
+        g_acc = jnp.zeros((chunk // 32,), jnp.uint32)
+    g_seen = None
 
     for s in range(pc):
         if s > 0:
             # hoisted rotation: issued ahead of this sub-step's slicing
             # and local scan so the async permute overlaps them
-            cseg = unpack_bits(lax.ppermute(carry, args.col_axis, rot_perm))
+            if pipelined:
+                # R is known since the PREVIOUS sub-step's start, so
+                # this permute overlaps the previous scan as well; the
+                # G permute's result is not consumed until after THIS
+                # sub-step's scan — neither blocks the Pallas scan
+                carry = lax.ppermute(carry, args.col_axis, rot_perm)
+                g_in = lax.ppermute(g_acc, args.col_axis, rot_perm)
+                cseg = unpack_bits(carry)
+            else:
+                cseg = unpack_bits(lax.ppermute(carry, args.col_axis,
+                                                rot_perm))
             if instr:
-                ctr["wire_rotate"] += jnp.float32(chunk / 64.0) * p
+                ctr["wire_rotate"] += jnp.float32(
+                    (2 if pipelined else 1) * chunk / 64.0) * p
                 ctr["use_rotate"] += jnp.float32(chunk / 64.0) * p
+        elif pipelined:
+            g_in = g_acc                  # no prior finds at sub-step 0
         seg_id = (j - s) % pc             # segment V_{i, j-s} this sub-step
         e0 = lax.dynamic_index_in_dim(g["seg_ptr"], seg_id, keepdims=False)
         e1 = lax.dynamic_index_in_dim(g["seg_ptr"], seg_id + 1, keepdims=False)
@@ -325,10 +371,23 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
         seg_par = ops.bottomup(rp_seg, ue, f_words, cvec, col_offset,
                                n_edges, ve)
         found = seg_par != INT_INF
+        if pipelined:
+            # exactness post-filter: the scan above used the stale
+            # R-only bitmap, so rows discovered by earlier sub-steps
+            # (the G chain, arriving here — after the scan) may have
+            # been re-found; mask them out.  Per-row results are
+            # independent of other rows' cvec, so the surviving finds
+            # are bit-identical to the exact-bitmap scan.
+            g_seen = unpack_bits(g_in)
+            found = found & ~g_seen
+            seg_par = jnp.where(found, seg_par, INT_INF)
         row_lens = (rp_seg[1:] - rp_seg[:-1]).astype(jnp.float32)
         if instr:
+            # scanned-row accounting uses the EXACT completed view (R|G
+            # when pipelined) so counters match the classic schedule
+            unknown = (cvec == 0) if not pipelined else ~(cseg | g_seen)
             edges_use += lax.psum(
-                jnp.sum(jnp.where(cvec == 0, row_lens, 0.0)), axes)
+                jnp.sum(jnp.where(unknown, row_lens, 0.0)), axes)
 
         # Accumulate the update segment for its layout-A owner (the
         # s=0 self segment never enters the buffers: it pays no wire
@@ -363,9 +422,12 @@ def bottomup_level(g: Dict[str, jax.Array], pi: jax.Array, front: jax.Array,
 
         # Mark discoveries in the carried bitmap; the rotation itself is
         # issued at the top of the next sub-step (hoisted)
-        cseg = cseg | found
-        if s != pc - 1:
-            carry = pack_bits(cseg)
+        if pipelined:
+            g_acc = pack_bits(g_seen | found)   # R rides carry unchanged
+        else:
+            cseg = cseg | found
+            if s != pc - 1:
+                carry = pack_bits(cseg)
 
     # --- Batched update exchange (one tiled all_to_all) -------------------
     def _a2a(x):

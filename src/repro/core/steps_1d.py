@@ -53,6 +53,10 @@ class LevelArgs1D(NamedTuple):
     maxdeg: int = 0           # kernel mode: max column-segment length
     ops: "object" = None      # LocalOps entry (None = look up from strings)
     instrument: bool = True   # False: compile out counters/level_stats
+    # software-pipelined expand: split the top-down allgather into this
+    # many sub-chunk collectives, consuming sub-chunk k while k+1 is in
+    # flight (1 = the classic single-gather schedule)
+    expand_chunks: int = 1
 
 
 def _resolve_ops(args: "LevelArgs1D"):
@@ -76,6 +80,90 @@ def expand_frontier_1d(front: jax.Array, axis: str):
     return gathered, wire
 
 
+# ---------------------------------------------------------------------------
+# Software-pipelined (chunked) expand
+# ---------------------------------------------------------------------------
+#
+# With ``expand_chunks = C > 1`` the top-down expand splits each owner's
+# packed strip words into C contiguous sub-chunks and runs C tiled
+# allgathers, issuing sub-chunk k+1's gather BEFORE consuming sub-chunk
+# k — the gathered sub-chunk feeds local discovery while the next
+# collective is in flight (total bytes unchanged:
+# ``comm_model.chunked_expand_1d_level_words``).  Exactness: every
+# top-down closure resolves candidates by scatter-MIN of global source
+# ids ((select-source, min) semiring), so per-sub-chunk partial SpMSV
+# passes combine exactly via ``jnp.minimum``.  Bottom-up keeps the ONE
+# dense allgather regardless of expand_chunks: its unvisited-row scan
+# takes the FIRST frontier in-neighbor (not the min), so partial-bitmap
+# passes would not combine exactly, and the heuristic only enters
+# bottom-up on large frontiers where the single tiled gather is
+# bandwidth- (not latency-) bound anyway.
+#
+# Gathered sub-chunk layout (both the dense gather and the 1ds sparse
+# sub-bucket decode produce it): ``(p * w_sub,)`` u32 words, owner-major
+# — owner i's words for LOCAL word range [k*w_sub, (k+1)*w_sub) sit at
+# [i*w_sub, (i+1)*w_sub), i.e. sub-chunk k covers owner-local vertices
+# [k*sub, (k+1)*sub) with sub = chunk/C.
+
+
+def _consume_subchunk(g, g_k, k: int, n_chunks: int, args: "LevelArgs1D"):
+    """Local discovery over ONE gathered sub-chunk -> (cand_k, ex_k).
+
+    Entries with a chunk-aware kernel closure (``LocalOps.topdown_chunk``,
+    e.g. the strip-DCSC Pallas kernel's per-chunk entry point) consume
+    the raw owner-major sub-chunk words directly; everything else gets
+    the sub-chunk scattered into a full-size partial frontier bitmap and
+    goes through the ordinary ``topdown`` closure."""
+    part = args.part
+    ops = _resolve_ops(args)
+    if getattr(ops, "topdown_chunk", None) is not None:
+        return ops.topdown_chunk(g, g_k, k, n_chunks, part.chunk,
+                                 jnp.int32(0), args)
+    p = part.p
+    w_sub = g_k.size // p
+    fw_k = jnp.zeros((p, n_chunks, w_sub), jnp.uint32).at[:, k, :].set(
+        g_k.reshape(p, w_sub)).reshape(-1)
+    f_k = unpack_bits(fw_k)
+    return ops.topdown(g, fw_k, f_k, part.chunk, jnp.int32(0), args)
+
+
+def pipelined_expand_consume(g, sub_gather, n_chunks: int,
+                             args: "LevelArgs1D"):
+    """Run the C-step expand/discover software pipeline.
+
+    ``sub_gather(k)`` issues the collective for sub-chunk k and returns
+    the gathered owner-major words.  The gather for sub-chunk k+1 is
+    issued before sub-chunk k is consumed, so the collective has no data
+    dependency on the SpMSV below it and the two overlap.  Candidate
+    parents min-combine across sub-chunks (exact under the
+    (select-source, min) semiring); edges-examined sums."""
+    cand = jnp.full((args.part.chunk,), INT_INF, jnp.int32)
+    ex = jnp.float32(0.0)
+    nxt = sub_gather(0)
+    for k in range(n_chunks):
+        cur = nxt
+        if k + 1 < n_chunks:
+            nxt = sub_gather(k + 1)     # in flight during the consume below
+        c_k, e_k = _consume_subchunk(g, cur, k, n_chunks, args)
+        cand = jnp.minimum(cand, c_k)
+        ex = ex + e_k
+    return cand, ex
+
+
+def _pipelined_topdown_expand_1d(g, front: jax.Array, args: "LevelArgs1D"):
+    """Chunked dense expand: C sub-chunk allgathers overlapped with the
+    per-sub-chunk SpMSV.  Returns (cand, ex_local, wire)."""
+    part = args.part
+    C = args.expand_chunks
+    words = pack_bits(front)                         # (chunk//32,) u32
+    subs = words.reshape(C, words.size // C)
+    cand, ex = pipelined_expand_consume(
+        g, lambda k: lax.all_gather(subs[k], args.axis, tiled=True), C, args)
+    wire = jnp.float32(
+        comm_model.chunked_expand_1d_level_words(part.n, part.p, C))
+    return cand, ex, wire
+
+
 def topdown_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
                      front: jax.Array, args: LevelArgs1D, lv=None
                      ) -> Tuple[jax.Array, jax.Array, Dict]:
@@ -87,20 +175,24 @@ def topdown_level_1d(g: Dict[str, jax.Array], pi: jax.Array,
     instr = args.instrument
     ctr = zero_counters() if instr else {}
 
-    # --- Expand: allgather the frontier bitmap along the axis ------------
-    f_words, wire = expand_frontier_1d(front, args.axis)
-    f_all = unpack_bits(f_words)                     # (n,) bool
+    if args.expand_chunks > 1:
+        # Software pipeline: C sub-chunk allgathers, each consumed by a
+        # partial SpMSV while the next is in flight (same total bytes).
+        cand, ex_local, wire = _pipelined_topdown_expand_1d(g, front, args)
+    else:
+        # --- Expand: allgather the frontier bitmap along the axis --------
+        f_words, wire = expand_frontier_1d(front, args.axis)
+        f_all = unpack_bits(f_words)                 # (n,) bool
+        # --- Local discovery: SpMSV over the strip (global source ids, so
+        # col_offset = 0; format-specific work lives in the LocalOps
+        # entry) --
+        cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
+                                                    part.chunk, jnp.int32(0),
+                                                    args)
     if instr:
         ctr["wire_expand"] = wire
         n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
         ctr["use_expand"] = n_f * (part.p - 1)       # sparse-id equivalent
-
-    # --- Local discovery: SpMSV over the strip (global source ids, so
-    # col_offset = 0; format-specific work lives in the LocalOps entry) --
-    cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
-                                                part.chunk, jnp.int32(0),
-                                                args)
-    if instr:
         ctr["edges_examined"] = lax.psum(ex_local, args.axis)
         ctr["edges_useful"] = lax.psum(
             jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),

@@ -75,7 +75,8 @@ from repro.core import comm_model
 from repro.core.frontier import (INT_INF, pack_bits, pack_ids, unpack_bits,
                                  unpack_ids)
 from repro.core.steps import zero_counters
-from repro.core.steps_1d import bottomup_level_1d, _resolve_ops
+from repro.core.steps_1d import (bottomup_level_1d, _resolve_ops,
+                                 pipelined_expand_consume)
 
 CODECS = ("none", "packed")
 
@@ -96,6 +97,10 @@ class LevelArgs1DS(NamedTuple):
     ops: "object" = None      # LocalOps entry (None = look up from strings)
     instrument: bool = True   # False: compile out counters/level_stats
     codec: str = "none"       # sparse-bucket encoding: "none" | "packed"
+    # software-pipelined expand: C sub-range bucket exchanges per level,
+    # each consumed while the next is in flight (1 = classic schedule);
+    # must divide chunk/32 and cap_x (plan_bfs validates)
+    expand_chunks: int = 1
 
 
 def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part,
@@ -194,6 +199,101 @@ def sparse_exchange_1d(front: jax.Array, axis: str, cap_x: int, part,
     return f_words, wire, over
 
 
+def _pipelined_topdown_1ds(g, send: jax.Array, over, args: "LevelArgs1DS"):
+    """Software-pipelined sparse top-down expand+discover
+    (``expand_chunks = C > 1``): the owner's chunk splits into C
+    contiguous sub-ranges of ``sub = chunk/C`` vertices, each exchanged
+    as its own capacity-``cap_x/C`` bucket allgather and consumed by a
+    partial SpMSV while the next exchange is in flight
+    (``pipelined_expand_consume``).  Candidates min-combine across
+    sub-chunks — exact under the (select-source, min) semiring — so
+    parents are bit-identical to the unchunked schedule.
+
+    The overflow predicate becomes "ANY processor's send set exceeds
+    cap_x/C in ANY sub-range" — still one globally-consistent scalar
+    (the fast path folds it into the previous level's fused reduction
+    exactly as before), and the whole level falls back to the CHUNKED
+    dense expand, keeping both cond branches at C collectives.  A level
+    that fits unchunked can overflow chunked (skewed sub-ranges), which
+    changes only which levels pay bitmap words — never parents or the
+    direction-mode sequence.
+
+    Every sub-exchange decodes into the same owner-major ``(p * w_sub,)``
+    sub-chunk word layout the chunked dense gather produces: raw ids
+    rebase ``owner*sub + local``; the packed codec decodes with
+    ``chunk=sub, n=p*sub`` so its bucket-position rebase lands there
+    natively (offsets narrow to ``codec_bits(sub)`` bits, one count word
+    per sub-bucket — see ``comm_model.compressed_expand_1d_words``'s
+    n_chunks term).
+
+    Returns (cand, ex_local, wire, over); ``wire`` is None
+    uninstrumented."""
+    part = args.part
+    C = args.expand_chunks
+    p = part.p
+    sub = part.chunk // C
+    cap_c = args.cap_x // C
+    axis = args.axis
+    i = lax.axis_index(axis)
+    use_kernel = args.local_mode == "kernel"
+
+    if over is None:
+        counts = jnp.sum(send.reshape(C, sub), axis=1, dtype=jnp.int32)
+        # global predicate: the cond branches contain collectives
+        over = lax.pmax(jnp.max(counts), axis) > cap_c
+
+    if args.codec == "packed":
+        from repro.kernels.frontier_codec import ops as codec_ops
+        from repro.kernels.frontier_codec import ref as codec_ref
+        enc = codec_ops.encode_offsets if use_kernel \
+            else codec_ref.encode_offsets
+        dec = (lambda r: codec_ops.decode_buckets(r, sub, cap_c,
+                                                  p * sub, p)) \
+            if use_kernel \
+            else (lambda r: codec_ref.decode_buckets(r, sub, cap_c,
+                                                     p * sub))
+
+        def sub_bucket(m_k, k):
+            off = pack_ids(m_k, cap_c, 0, sub)       # sub-range offsets
+            buf = enc(off, jnp.sum(m_k, dtype=jnp.int32), sub)
+            recv = lax.all_gather(buf, axis, tiled=True)
+            return unpack_ids(dec(recv), p * sub)
+    else:
+        def sub_bucket(m_k, k):
+            ids = pack_ids(m_k, cap_c, i * part.chunk + k * sub, part.n)
+            recv = lax.all_gather(ids, axis, tiled=True)  # (p*cap_c,)
+            owner = recv // part.chunk
+            pos = owner * sub + (recv - owner * part.chunk - k * sub)
+            return unpack_ids(jnp.where(recv < part.n, pos, p * sub),
+                              p * sub)
+
+    def sparse(s):
+        subs_mask = s.reshape(C, sub)
+        return pipelined_expand_consume(
+            g, lambda k: sub_bucket(subs_mask[k], k), C, args)
+
+    def dense(s):
+        subs = pack_bits(s).reshape(C, sub // 32)
+        return pipelined_expand_consume(
+            g, lambda k: lax.all_gather(subs[k], axis, tiled=True), C, args)
+
+    cand, ex = lax.cond(over, dense, sparse, send)
+
+    wire = None
+    if args.instrument:
+        n_f = lax.psum(jnp.sum(send, dtype=jnp.float32), axis)
+        sparse_words = comm_model.compressed_expand_1d_words(
+            n_f, p, comm_model.codec_bits(sub), C) \
+            if args.codec == "packed" \
+            else comm_model.sparse_expand_1d_words(n_f, p)
+        wire = jnp.where(
+            over,
+            jnp.float32(comm_model.chunked_expand_1d_level_words(
+                part.n, p, C)),
+            jnp.float32(sparse_words))
+    return cand, ex, wire, over
+
+
 def topdown_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
                       front: jax.Array, args: LevelArgs1DS, lv=None
                       ) -> Tuple[jax.Array, jax.Array, Dict]:
@@ -215,23 +315,30 @@ def topdown_level_1ds(g: Dict[str, jax.Array], pi: jax.Array,
     over = lv["over"] if lv is not None else None
     visited = (pi != -1) & ~front
 
-    # --- Expand: owner-directed sparse ids, dense bitmap on overflow ----
-    f_words, wire, _ = sparse_exchange_1d(
-        front, args.axis, args.cap_x, part, over=over, instrument=instr,
-        visited=visited, codec=args.codec,
-        use_kernel=(args.local_mode == "kernel"))
-    f_all = unpack_bits(f_words)                     # (n,) bool
+    if args.expand_chunks > 1:
+        # Software pipeline: C sub-range bucket exchanges, each consumed
+        # by a partial SpMSV while the next is in flight.
+        send = front & ~visited
+        cand, ex_local, wire, _ = _pipelined_topdown_1ds(g, send, over,
+                                                         args)
+    else:
+        # --- Expand: owner-directed sparse ids, dense bitmap on
+        # overflow --
+        f_words, wire, _ = sparse_exchange_1d(
+            front, args.axis, args.cap_x, part, over=over,
+            instrument=instr, visited=visited, codec=args.codec,
+            use_kernel=(args.local_mode == "kernel"))
+        f_all = unpack_bits(f_words)                 # (n,) bool
+        # --- Local discovery: unchanged from "1d" (same LocalOps
+        # entries) --
+        cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
+                                                    part.chunk,
+                                                    jnp.int32(0), args)
     if instr:
         ctr["wire_expand"] = wire
         n_f = lax.psum(jnp.sum(front, dtype=jnp.float32), args.axis)
         ctr["use_expand"] = jnp.float32(
             comm_model.sparse_expand_1d_words(n_f, part.p))
-
-    # --- Local discovery: unchanged from "1d" (same LocalOps entries) ---
-    cand, ex_local = _resolve_ops(args).topdown(g, f_words, f_all,
-                                                part.chunk, jnp.int32(0),
-                                                args)
-    if instr:
         ctr["edges_examined"] = lax.psum(ex_local, args.axis)
         ctr["edges_useful"] = lax.psum(
             jnp.sum(jnp.where(front, g["deg_A"], 0), dtype=jnp.float32),

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.core.frontier import INT_INF
 from repro.kernels.spmsv.spmsv import gather_segments
-from repro.kernels.spmsv.strip import gather_strip_segments
+from repro.kernels.spmsv.strip import (gather_strip_segments,
+                                       gather_strip_segments_chunk)
 
 
 def _scatter_min(dst, ids, col_offset, nr, cap_f):
@@ -56,6 +57,21 @@ def spmsv_strip_dcsc(jc, cp, nzc, row_idx, f_words, nr: int,
                                 maxdeg=maxdeg, interpret=interpret)
     # sentinel slots (jc = n) gather nothing, so their parent value is
     # never scattered; col_offset=0 keeps the ids global
+    return _scatter_min(dst, jc, jnp.int32(0), nr, jc.shape[0])
+
+
+def spmsv_strip_dcsc_chunk(jc, cp, nzc, row_idx, f_sub, nr: int, *, n: int,
+                           p: int, k: int, n_chunks: int, maxdeg: int,
+                           interpret: bool = True):
+    """Software-pipelined strip SpMSV step: consume ONE gathered
+    sub-chunk of the chunked expand (owner-major ``(p * w_sub,)`` u32
+    words covering owner-local word range [k*w_sub, (k+1)*w_sub)) with
+    no full-size frontier bitmap ever built.  The caller min-combines
+    the per-chunk candidates — exact, since the scatter below is a MIN
+    over global source ids."""
+    dst = gather_strip_segments_chunk(jc, cp, nzc, row_idx, f_sub, n=n, p=p,
+                                      k=k, n_chunks=n_chunks, maxdeg=maxdeg,
+                                      interpret=interpret)
     return _scatter_min(dst, jc, jnp.int32(0), nr, jc.shape[0])
 
 

@@ -78,3 +78,77 @@ def gather_strip_segments(jc, cp, nzc, row_idx, f_words, *, maxdeg: int,
         interpret=interpret,
     )(jc.astype(jnp.int32), cp.astype(jnp.int32),
       jnp.asarray(nzc, jnp.int32).reshape(1), f_words, row_idx)
+
+
+def _strip_gather_chunk_kernel(jc_ref, cp_ref, nzc_ref, fw_ref, ridx_ref,
+                               out_ref, *, et: int, n: int, wpc: int,
+                               w_sub: int, k: int):
+    """Per-chunk entry of the strip gather: ``fw_ref`` is the RAW gathered
+    sub-chunk buffer of one software-pipelined expand step — owner-major
+    ``(p * w_sub,)`` u32 words covering owner-local word range
+    [k*w_sub, (k+1)*w_sub) of each owner's ``wpc``-word strip — consumed
+    directly, so no full-size frontier bitmap is ever materialized.  A
+    column is live only when it falls inside sub-chunk k; the caller
+    min-combines the per-chunk scatter results (exact under the
+    (select-source, min) semiring)."""
+    g = pl.program_id(0)          # non-empty-column slot
+    t = pl.program_id(1)          # edge tile within the slot's segment
+    u = jc_ref[g]                 # GLOBAL source column id (sentinel = n)
+    uc = jnp.minimum(u, n - 1)
+    wi = uc >> 5                  # global packed-word index
+    owner = wi // wpc
+    lw = wi - owner * wpc         # word index within the owner's strip
+    in_rng = (lw >= k * w_sub) & (lw < (k + 1) * w_sub)
+    pos = jnp.where(in_rng, owner * w_sub + (lw - k * w_sub), 0)
+    w = fw_ref[pos]
+    in_f = ((w >> (uc.astype(jnp.uint32) & jnp.uint32(31))) & 1) == 1
+    live = (g < nzc_ref[0]) & (u < n) & in_rng & in_f
+    s = cp_ref[g]
+    ln = jnp.where(live, cp_ref[g + 1] - s, 0)
+    off = t * et
+
+    @pl.when(off < ln)
+    def _():
+        lane = jnp.arange(et, dtype=jnp.int32)
+        v = pl.load(ridx_ref, (pl.ds(s + off, et),))
+        out_ref[0, :] = jnp.where(off + lane < ln, v, jnp.int32(-1))
+
+    @pl.when(off >= ln)
+    def _():
+        out_ref[0, :] = jnp.full((et,), -1, jnp.int32)
+
+
+def gather_strip_segments_chunk(jc, cp, nzc, row_idx, f_sub, *, n: int,
+                                p: int, k: int, n_chunks: int, maxdeg: int,
+                                et: int = 256, interpret: bool = True):
+    """Chunked variant of ``gather_strip_segments``: ``f_sub`` is the
+    owner-major gathered sub-chunk words ``(p * w_sub,)`` of pipeline
+    step ``k`` (of ``n_chunks``).  ``n`` and ``p`` are passed explicitly
+    — the buffer no longer spans the full vertex range, so neither is
+    derivable from its shape (every sub-chunk buffer is exactly
+    (n/32)/n_chunks words regardless of p)."""
+    wpc = (n // p) // 32                  # packed words per owner strip
+    w_sub = wpc // n_chunks
+    if f_sub.shape[0] != p * w_sub:
+        raise ValueError(
+            f"sub-chunk buffer has {f_sub.shape[0]} words, expected "
+            f"p*w_sub = {p}*{w_sub} for n={n}, n_chunks={n_chunks}")
+    cap_nzc = jc.shape[0]
+    maxdeg = ((max(maxdeg, 1) + et - 1) // et) * et
+    grid = (cap_nzc, maxdeg // et)
+    return pl.pallas_call(
+        functools.partial(_strip_gather_chunk_kernel, et=et, n=n, wpc=wpc,
+                          w_sub=w_sub, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # jc
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # cp
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # nzc (1,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # sub-chunk words
+            pl.BlockSpec(row_idx.shape, lambda g, t: (0,)),   # edge ids (VMEM)
+        ],
+        out_specs=pl.BlockSpec((1, et), lambda g, t: (g, t)),
+        out_shape=jax.ShapeDtypeStruct((cap_nzc, maxdeg), jnp.int32),
+        interpret=interpret,
+    )(jc.astype(jnp.int32), cp.astype(jnp.int32),
+      jnp.asarray(nzc, jnp.int32).reshape(1), f_sub, row_idx)

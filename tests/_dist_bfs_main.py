@@ -410,6 +410,62 @@ def main():
                 assert np.array_equal(bp.parents[i], single.parents), (
                     "batch", decomp, int(root))
         print("OK fastpath")
+    elif mode == "pipelined":
+        # software-pipelined expand acceptance on 16 devices: for every
+        # decomposition x expand_chunks in {2, 4}, the chunked program
+        # must return BIT-IDENTICAL parents to expand_chunks=1 (the
+        # chunked gather reorders the exchange, never the
+        # (select-source, min) semiring result), keep the identical
+        # per-level direction-mode sequence when instrumented, and the
+        # instrument=False fast path must agree too.  Scale 11 over 16
+        # strips packs each strip to 4 words, so 4 is the deepest
+        # chunking this mesh admits.
+        from repro.core.engine import plan_bfs
+        edges = rmat_graph(11, edge_factor=8, seed=11)
+        deg = edges.out_degrees()
+        roots = [int(r) for r in np.flatnonzero(deg > 0)[:2]]
+        g1 = build_blocked_1d(edges, n_dev, align=32, cap_pad=32)
+        g2 = build_blocked(edges, 4, 4, align=32, cap_pad=32)
+        cases = [("1d", g1, make_local_mesh_1d(n_dev), {}),
+                 ("1ds", g1, make_local_mesh_1d(n_dev), {}),
+                 ("1ds", g1, make_local_mesh_1d(n_dev),
+                  {"frontier_codec": "none"}),
+                 ("2d", g2, make_local_mesh(4, 4), {})]
+        for decomp, g, mesh, kw in cases:
+            ref = plan_bfs(g, BFSConfig(decomposition=decomp, **kw),
+                           mesh).compile()
+            refs = [ref.run(r) for r in roots]
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst,
+                                       roots[0], refs[0].parents)
+            assert ok, (decomp, kw, msg)
+            for ec in (2, 4):
+                eng = plan_bfs(g, BFSConfig(decomposition=decomp,
+                                            expand_chunks=ec, **kw),
+                               mesh).compile()
+                fast = plan_bfs(g, BFSConfig(decomposition=decomp,
+                                             expand_chunks=ec,
+                                             instrument=False, **kw),
+                                mesh).compile()
+                for i, root in enumerate(roots):
+                    r = eng.run(root)
+                    rf = fast.run(root)
+                    key = (decomp, kw, ec, root)
+                    assert np.array_equal(r.parents, refs[i].parents), key
+                    assert r.n_levels == refs[i].n_levels, key
+                    # the chunked exchange must not perturb a single
+                    # direction decision: stats cols (n_f, m_f, mode,
+                    # used) identical; wire (col 4) may differ only for
+                    # "1ds" (per-sub-range overflow -> dense fallback)
+                    assert np.array_equal(
+                        r.level_stats[:, :4],
+                        refs[i].level_stats[:, :4]), key
+                    if decomp != "1ds":
+                        assert np.array_equal(
+                            r.level_stats, refs[i].level_stats), key
+                    assert np.array_equal(rf.parents, refs[i].parents), key
+                    assert rf.n_levels == refs[i].n_levels, key
+                    assert rf.counters == {}, key
+        print("OK pipelined")
     elif mode == "multiroot":
         edges = rmat_graph(10, edge_factor=8, seed=9)
         rng = np.random.default_rng(0)

@@ -99,6 +99,13 @@ def main():
         ("1d", "1d", {}),
         ("1ds", "1ds", {}),                      # packed codec (default)
         ("1ds_raw", "1ds", dict(frontier_codec="none")),
+        # software-pipelined expand: chunk the 1d/1ds top-down gather,
+        # pipeline the 2d bottom-up ring (R/G split).  The scale-9 p=8
+        # strips pack to 2 words, so 2 is the only chunking this graph
+        # admits — enough to pin the C-proportional budgets.
+        ("1d_c2", "1d", dict(expand_chunks=2)),
+        ("1ds_c2", "1ds", dict(expand_chunks=2)),
+        ("2d_pipe", "2d", dict(fold_mode="alltoall", expand_chunks=2)),
     ]
     for name, decomp, kw in cases:
         g = g2 if decomp == "2d" else g1

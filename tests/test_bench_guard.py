@@ -1,0 +1,73 @@
+"""The append-only bench-regression guard
+(benchmarks/check_bench_regression.py): unit cases over synthetic
+trajectories plus a live run against the committed BENCH_bfs.json."""
+import json
+import os
+import subprocess
+import sys
+
+_HERE = os.path.dirname(__file__)
+_ROOT = os.path.join(_HERE, "..")
+sys.path.insert(0, os.path.join(_ROOT, "benchmarks"))
+
+from check_bench_regression import check_points  # noqa: E402
+
+
+def _point(**mins):
+    """{name: (fast_min, inst_min)} -> one bench point."""
+    return {"decompositions": {
+        name: {"fast": {"traverse_min_s": f},
+               "instrumented": {"traverse_min_s": i}}
+        for name, (f, i) in mins.items()}}
+
+
+def test_clean_within_threshold():
+    data = {"points": [_point(**{"1d": (0.20, 0.22)}),
+                       _point(**{"1d": (0.24, 0.26)})]}   # +20% < 25%
+    assert check_points(data) == []
+
+
+def test_regression_detected_per_mode():
+    data = {"points": [_point(**{"1d": (0.20, 0.22), "2d": (0.30, 0.33)}),
+                       _point(**{"1d": (0.27, 0.22), "2d": (0.30, 0.45)})]}
+    msgs = check_points(data)
+    assert len(msgs) == 2
+    assert any("1d/fast" in m for m in msgs)
+    assert any("2d/instrumented" in m for m in msgs)
+
+
+def test_tolerates_renamed_and_missing_decomps():
+    """Variant names drift across points (point 0's "1ds" split into
+    "1ds-raw"/"1ds-packed"); only pairs present in BOTH points count."""
+    data = {"points": [_point(**{"1ds": (0.20, 0.22), "1d": (0.2, 0.2)}),
+                       _point(**{"1ds-raw": (9.0, 9.0),
+                                 "1d": (0.21, 0.21)})]}
+    assert check_points(data) == []
+
+
+def test_single_point_and_empty_are_clean():
+    assert check_points({"points": []}) == []
+    assert check_points({"points": [_point(**{"1d": (0.2, 0.2)})]}) == []
+
+
+def test_threshold_is_configurable():
+    data = {"points": [_point(**{"1d": (0.20, 0.20)}),
+                       _point(**{"1d": (0.23, 0.20)})]}   # +15%
+    assert check_points(data, threshold=0.25) == []
+    assert len(check_points(data, threshold=0.10)) == 1
+
+
+def test_committed_bench_file_passes():
+    """CI gate: the repo's own trajectory must be clean — the newest
+    appended point may not regress >25% vs its predecessor."""
+    path = os.path.join(_ROOT, "BENCH_bfs.json")
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(_ROOT, "benchmarks", "check_bench_regression.py"),
+         path],
+        capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "bench guard clean" in r.stdout
+    # and the guard actually compared something once >= 2 points exist
+    if len(json.load(open(path)).get("points", [])) >= 2:
+        assert "->" in r.stdout

@@ -186,6 +186,48 @@ def test_compressed_exchange_closed_forms():
         < comm_model.sparse_expand_padded_words(32, p)
 
 
+def test_chunked_exchange_closed_forms():
+    """The software-pipelined expand's wire forms: dense chunking moves
+    latency, never bytes; packed chunking trades narrower offsets for
+    C-fold count words; the collective budgets scale with C."""
+    n, p = 1 << 20, 16
+    chunk = n // p
+    # chunked dense == unchunked dense, for every admissible C
+    for c in (1, 2, 4, 32):
+        assert comm_model.chunked_expand_1d_level_words(n, p, c) \
+            == comm_model.expand_1d_level_words(n, p)
+    with pytest.raises(ValueError, match="does not divide"):
+        comm_model.chunked_expand_1d_level_words(n, p, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        comm_model.chunked_expand_1d_level_words(n, p, 0)
+    # packed chunked form: ids at codec_bits(chunk/C), one count word
+    # per sub-bucket per owner
+    n_f, c = 1000.0, 4
+    bits_c = comm_model.codec_bits(chunk // c)
+    assert comm_model.compressed_expand_1d_words(n_f, p, bits_c, c) \
+        == (p - 1) * (n_f * bits_c + 32 * p * c) / 64
+    # narrower offsets save 2 bits/id here; the extra count words cost
+    # 32*(c-1) u32s per owner — net must stay below the raw exchange
+    assert comm_model.compressed_expand_1d_words(n_f, p, bits_c, c) \
+        < comm_model.sparse_expand_1d_words(n_f, p)
+    # collective budgets scale with C: 1d td = C, 1ds td = 2C (C
+    # execute), bottom-up untouched; 2d bu ring doubles its permutes
+    budget = comm_model.level_collective_budget
+    assert budget("1d", "td", p, expand_chunks=4) == 4
+    assert budget("1d", "bu", p, expand_chunks=4) \
+        == budget("1d", "bu", p)
+    assert budget("1ds", "td", p, codec="packed", expand_chunks=4) == 8
+    assert budget("1ds", "bu", p, expand_chunks=4) \
+        == budget("1ds", "bu", p)
+    pc = 4
+    assert budget("2d", "bu", pc, expand_chunks=2) \
+        == budget("2d", "bu", pc) + (pc - 1)
+    assert budget("2d", "td", pc, "alltoall", expand_chunks=2) \
+        == budget("2d", "td", pc, "alltoall")
+    with pytest.raises(ValueError, match="expand_chunks"):
+        budget("1d", "td", p, expand_chunks=0)
+
+
 def test_plan_cap_x_bounds():
     n, p = 1 << 20, 16
     cap = comm_model.plan_cap_x(n, p, m=8 * n)

@@ -27,7 +27,7 @@ def _run(n_dev, mode, timeout=1200):
 
 @pytest.mark.parametrize("mode", ["grids", "kernel", "counters",
                                   "multiroot", "optimized", "multipod",
-                                  "podheur", "fastpath"])
+                                  "podheur", "fastpath", "pipelined"])
 def test_distributed_bfs(mode):
     _run(16, mode)
 

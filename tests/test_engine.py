@@ -126,6 +126,48 @@ def test_instrument_off_direction_switching(fixed_graph):
     assert modes.max() == 1.0
 
 
+@pytest.mark.parametrize("ec", [2, 4])
+def test_pipelined_expand_parity_matrix(fixed_graph, ec):
+    """expand_chunks > 1 (the software-pipelined expand) must return
+    bit-identical parents to the unpipelined program in every
+    decomposition x local_mode x storage combo (plus the raw-id "1ds"
+    codec), instrumented AND fast — chunking reorders the gather, never
+    the (select-source, min) semiring result.  Instrumented runs must
+    also keep the identical per-level mode sequence."""
+    e, g1, g2 = fixed_graph
+    root = int(np.flatnonzero(e.out_degrees())[0])
+    cases = [(dc, lm, st_, None) for dc, lm, st_
+             in local_ops.registered_combos()]
+    cases += [("1ds", "dense", "csr", "none")]
+    for dc, lm, st_, codec in cases:
+        g = _graph_for(dc, g1, g2)
+        mesh = _mesh_for(dc)
+        kw = {} if codec is None else {"frontier_codec": codec}
+        ref = plan_bfs(g, BFSConfig(decomposition=dc, storage=st_, **kw),
+                       mesh, local_mode=lm).compile().run(root)
+        res = plan_bfs(g, BFSConfig(decomposition=dc, storage=st_,
+                                    expand_chunks=ec, **kw),
+                       mesh, local_mode=lm).compile().run(root)
+        key = (dc, lm, st_, codec, ec)
+        assert np.array_equal(res.parents, ref.parents), key
+        assert res.n_levels == ref.n_levels, key
+        # identical direction decisions: stats cols (n_f, m_f, mode,
+        # used); wire_expand (col 4) may legitimately differ for "1ds"
+        # (per-sub-range overflow can flip a level to the dense
+        # fallback) and the 2d ring pays its extra G-chain permutes
+        assert np.array_equal(res.level_stats[:, :4],
+                              ref.level_stats[:, :4]), key
+        if dc != "1ds":
+            assert np.array_equal(res.level_stats, ref.level_stats), key
+        resf = plan_bfs(g, BFSConfig(decomposition=dc, storage=st_,
+                                     expand_chunks=ec, instrument=False,
+                                     **kw),
+                        mesh, local_mode=lm).compile().run(root)
+        assert np.array_equal(resf.parents, ref.parents), key
+        assert resf.n_levels == ref.n_levels, key
+        assert resf.counters == {}, key
+
+
 # ---------------------------------------------------------------------------
 # Compile-once / ship-once
 # ---------------------------------------------------------------------------
@@ -222,6 +264,37 @@ def test_plan_rejects_missing_cap_x():
                       make_local_mesh_1d(1), cap_x=part.chunk + 32)
     plan_for_part(part, BFSConfig(decomposition="1ds"),
                   make_local_mesh_1d(1), cap_x=32)   # explicit cap is fine
+
+
+def test_plan_rejects_bad_expand_chunks():
+    """The software-pipelined expand needs expand_chunks >= 1, dividing
+    the strip's packed word count (1d/1ds) and cap_x (1ds) — a ragged
+    sub-chunk would silently mis-align the owner-major gather layout,
+    so the plan must fail loudly instead."""
+    part = make_partition_1d(256, 1, align=32)     # chunk=256 -> 8 words
+    with pytest.raises(ValueError, match="expand_chunks"):
+        plan_for_part(part, BFSConfig(decomposition="1d",
+                                      expand_chunks=0),
+                      make_local_mesh_1d(1))
+    with pytest.raises(ValueError, match="does not divide the per-device"):
+        plan_for_part(part, BFSConfig(decomposition="1d",
+                                      expand_chunks=3),
+                      make_local_mesh_1d(1))
+    with pytest.raises(ValueError, match="does not divide the per-device"):
+        plan_for_part(part, BFSConfig(decomposition="1ds",
+                                      expand_chunks=16),
+                      make_local_mesh_1d(1), cap_x=32)
+    with pytest.raises(ValueError, match="does not divide cap_x"):
+        plan_for_part(part, BFSConfig(decomposition="1ds",
+                                      expand_chunks=4),
+                      make_local_mesh_1d(1), cap_x=34)
+    # divisors of both are fine, in every decomposition
+    for dc, kw in (("1d", {}), ("1ds", dict(cap_x=32))):
+        plan_for_part(part, BFSConfig(decomposition=dc, expand_chunks=4),
+                      make_local_mesh_1d(1), **kw)
+    part2 = make_partition(256, 1, 1, align=32)
+    plan_for_part(part2, BFSConfig(expand_chunks=2), make_local_mesh(1, 1),
+                  cap_seg=32)                      # 2d: any >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -62,6 +62,15 @@ def test_fast_level_budgets(counts):
                 budget("1ds", "bu", p, codec="packed")),
         "1ds_raw": (budget("1ds", "td", p, codec="none"),
                     budget("1ds", "bu", p, codec="none")),
+        # pipelined expand: 1d td budget C, 1ds td 2C (C execute), 2d
+        # bottom-up ring 2(pc-1) ppermutes (R/G split); bottom-up in the
+        # strip decompositions keeps its single dense allgather
+        "1d_c2": (budget("1d", "td", p, expand_chunks=2),
+                  budget("1d", "bu", p, expand_chunks=2)),
+        "1ds_c2": (budget("1ds", "td", p, codec="packed", expand_chunks=2),
+                   budget("1ds", "bu", p, codec="packed", expand_chunks=2)),
+        "2d_pipe": (budget("2d", "td", pc, "alltoall"),
+                    budget("2d", "bu", pc, expand_chunks=2)),
     }
     for name, (td_budget, bu_budget) in cases.items():
         fast = counts[name]["fast"]
@@ -79,7 +88,8 @@ def test_fast_search_single_fused_reduction(counts):
     """The fast whole-search program spends exactly one fused vector
     psum per level: 2 all-reduce ops in the program text (startup +
     while body), +1 for the compact-updates overflow pmax."""
-    for name in ("2d_alltoall", "2d_reduce", "1d", "1ds", "1ds_raw"):
+    for name in ("2d_alltoall", "2d_reduce", "1d", "1ds", "1ds_raw",
+                 "1d_c2", "1ds_c2", "2d_pipe"):
         ar = counts[name]["fast"]["search"].get("all-reduce", 0)
         assert ar <= 2, (name, counts[name]["fast"]["search"])
     # the compact-update and bitmap-fold overflow pmaxes add one each
