@@ -343,6 +343,11 @@ def bench_trajectory(scale: int = 14, grid=(4, 4), n_devices: int = 16,
              f"speedup_vs_instrumented={row['speedup_fast']:.3f};"
              f"best_chunking={best_c}")
         point["decompositions"][label] = row
+    # the born-sharded build + store numbers at the SAME pinned config:
+    # disk -> first-traversal vs rebuild + recompile (PR 8 acceptance)
+    point["build_store"] = build_store_lane(
+        scale, grid, n_devices=n_devices, decomposition="1d",
+        roots=roots, degree=degree)
     if out_json:
         points = []
         if os.path.exists(out_json):
@@ -355,6 +360,60 @@ def bench_trajectory(scale: int = 14, grid=(4, 4), n_devices: int = 16,
         with open(out_json, "w") as f:
             json.dump({"points": points}, f, indent=2)
     return point
+
+
+def build_store_lane(scale: int, grid, n_devices: int = 16,
+                     decomposition: str = "1d", roots: int = 4,
+                     degree: int = 16, seed: int = 1,
+                     store_dir: Optional[str] = None,
+                     out_json: Optional[str] = None) -> Dict:
+    """The born-sharded build-then-load acceptance lane: one worker
+    process builds the graph ON DEVICE (distributed R-MAT generation +
+    owner routing, no host edge list), persists graph + AOT executable
+    to a shared store, and a SECOND worker process — cold, nothing
+    cached — reloads both and traverses.  The artifact pins build TEPS
+    and the figure the store exists for: disk -> first-traversal latency
+    vs rebuild + recompile on the same mesh."""
+    import tempfile
+    store = store_dir or tempfile.mkdtemp(prefix="graph_store_")
+    base = {"scale": scale, "grid": list(grid), "roots": roots,
+            "degree": degree, "seed": seed,
+            "decomposition": decomposition, "store_dir": store}
+    build = run_worker({**base, "phase": "build"}, n_devices=n_devices)
+    load = run_worker({**base, "phase": "load"}, n_devices=n_devices)
+    rebuild_s = (build["build_s"] + build["ship_s"] + build["compile_s"]
+                 + build["first_traversal_s"])
+    art = {
+        "config": base, "n_devices": n_devices,
+        "build_s": build["build_s"], "build_teps": build["build_teps"],
+        "gen_route_s": build["gen_route_s"],
+        "format_s": build["format_s"], "save_s": build["save_s"],
+        "compile_s": build["compile_s"],
+        "route_words_measured": build["route_words_measured"],
+        "route_words_expected": build["route_words_expected"],
+        "m": build["m"], "m_input": build["m_input"],
+        "load_s": load["load_s"], "exec_load_s": load["exec_load_s"],
+        "exec_from_store": load["exec_from_store"],
+        "ship_s_loaded": load["ship_s"],
+        "disk_to_first_traversal_s": load["to_first_traversal_s"],
+        "rebuild_to_first_traversal_s": rebuild_s,
+        "store_speedup": rebuild_s / load["to_first_traversal_s"],
+        "traverse_hmean_s": {"build": build["hmean_s"],
+                             "load": load["hmean_s"]},
+        "teps": {"build": build["teps"], "load": load["teps"]},
+    }
+    emit(f"bfs_build_s{scale}_{decomposition}_p{n_devices}",
+         build["build_s"] * 1e6,
+         f"build_teps={build['build_teps']:.3e};"
+         f"save_s={build['save_s']:.3f};compile_s={build['compile_s']:.3f}")
+    emit(f"bfs_store_load_s{scale}_{decomposition}_p{n_devices}",
+         load["to_first_traversal_s"] * 1e6,
+         f"rebuild_s={rebuild_s:.3f};speedup={art['store_speedup']:.2f};"
+         f"exec_hit={load['exec_from_store']}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(art, f, indent=2)
+    return art
 
 
 def engine_timing_summary(rows) -> List[Dict]:
@@ -417,6 +476,17 @@ def _main():
     ap.add_argument("--bench-devices", type=int, default=16,
                     help="override the pinned bench_trajectory devices "
                          "(grid is sqrt x sqrt)")
+    ap.add_argument("--build-out", default=None,
+                    help="run build_store_lane (device-side distributed "
+                         "build -> persist -> cold reload -> traverse) "
+                         "and write the build_s/load_s/compile_s "
+                         "artifact to this path")
+    ap.add_argument("--build-scale", type=int, default=16,
+                    help="R-MAT scale for the --build-out lane")
+    ap.add_argument("--build-devices", type=int, default=16,
+                    help="forced device count for the --build-out lane")
+    ap.add_argument("--build-decomp", default="1d",
+                    help="decomposition for the --build-out lane")
     a = ap.parse_args()
     pr, pc = map(int, a.grid.split("x"))
     print("name,us_per_call,derived")
@@ -446,6 +516,12 @@ def _main():
         bench_trajectory(scale=a.bench_scale, grid=(side, side),
                          n_devices=a.bench_devices, roots=a.roots,
                          out_json=a.bench_out)
+    if a.build_out:
+        g1 = (a.build_devices, 1) if a.build_decomp in ("1d", "1ds") \
+            else (int(round(a.build_devices ** 0.5)),) * 2
+        build_store_lane(a.build_scale, g1, n_devices=a.build_devices,
+                         decomposition=a.build_decomp, roots=a.roots,
+                         out_json=a.build_out)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,78 @@ import time
 import numpy as np
 
 
+def _build_store_phase(payload):
+    from repro.ckpt.graph_store import GraphStore, plan_bfs_from_store
+    from repro.configs.base import BFSConfig
+    from repro.core.engine import plan_bfs
+    from repro.graph.dist_build import BuildSpec, dist_build
+    from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+
+    pr, pc = payload["grid"]
+    decomp = payload.get("decomposition", "1d")
+    spec = BuildSpec(scale=payload["scale"],
+                     edge_factor=payload.get("degree", 16),
+                     seed=payload.get("seed", 1))
+    cfg = BFSConfig(decomposition=decomp,
+                    instrument=payload.get("instrument", False))
+    store = GraphStore(payload["store_dir"])
+    name = payload.get("name", f"s{spec.scale}-{decomp}")
+    mesh = make_local_mesh_1d(pr * pc) if decomp in ("1d", "1ds") \
+        else make_local_mesh(pr, pc)
+
+    if payload["phase"] == "build":
+        g, info = dist_build(spec, decomp, mesh, (pr, pc))
+        t1 = time.perf_counter()
+        store.save_graph(name, g, spec=spec)
+        save_s = time.perf_counter() - t1
+        plan = plan_bfs(g, cfg, mesh)
+        eng = plan.compile(store=store)       # compiles + persists exec
+        extra = {"build_s": info["build_s"], "save_s": save_s,
+                 "gen_route_s": info["gen_route_s"],
+                 "format_s": info["format_s"],
+                 "build_teps": info["build_teps"],
+                 "route_words_measured": info["route_words_measured"],
+                 "route_words_expected": info["route_words_expected"],
+                 "m": info["m"], "m_input": info["m_input"]}
+    else:
+        t2 = time.perf_counter()
+        plan = plan_bfs_from_store(store, name, cfg, mesh,
+                                   expect_spec=spec)
+        load_s = time.perf_counter() - t2
+        eng = plan.compile(store=store)       # exec from disk on hit
+        g = plan.graph
+        extra = {"load_s": load_s, "exec_load_s": eng.exec_load_s,
+                 "exec_from_store": eng.exec_from_store,
+                 "m": int(g.m), "m_input": int(g.m_input)}
+
+    # born-sharded graphs have no host edge list: pick high-degree roots
+    # from the (small) degree vector instead of random_source(edges)
+    deg = np.asarray(g.deg_A).ravel()         # layout A ravel == global id
+    roots = np.argsort(deg)[::-1][: payload.get("roots", 4)]
+    t3 = time.perf_counter()
+    out0 = eng.search(int(roots[0]))
+    out0[0].block_until_ready()
+    first_s = time.perf_counter() - t3        # includes dispatch warmup
+    times = []
+    for r in roots:
+        ta = time.perf_counter()
+        out = eng.search(int(r))
+        out[0].block_until_ready()
+        times.append(time.perf_counter() - ta)
+    hmean = len(times) / sum(1.0 / t for t in times)
+    print(json.dumps({
+        **extra, "phase": payload["phase"], "decomposition": decomp,
+        "n_pad": g.part.n, "p": g.part.p,
+        "compile_s": eng.compile_s, "ship_s": eng.ship_s,
+        "first_traversal_s": first_s, "times": times, "hmean_s": hmean,
+        "teps": extra["m_input"] / hmean,
+        "to_first_traversal_s": (extra.get("build_s", 0.0)
+                                 + extra.get("load_s", 0.0)
+                                 + eng.ship_s + eng.compile_s
+                                 + eng.exec_load_s + first_s),
+    }))
+
+
 def main():
     payload = json.loads(sys.stdin.read())
     from repro.configs.base import BFSConfig
@@ -20,6 +92,15 @@ def main():
     from repro.graph.formats import build_blocked, build_blocked_1d
     from repro.graph.rmat import rmat_graph, scale_free_standin, random_source
     from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+
+    if payload.get("phase") in ("build", "load"):
+        # born-sharded build / store lanes: phase "build" generates the
+        # graph ON DEVICE (no host edge list), persists graph +
+        # executable to the shared store dir, and reports build TEPS;
+        # phase "load" (a fresh process, so nothing is warm) measures
+        # the disk -> first-traversal latency the store exists for.
+        _build_store_phase(payload)
+        return
 
     if payload.get("graph") == "twitter_standin":
         edges = scale_free_standin(payload["n"], payload["m"], seed=7)

@@ -6,6 +6,7 @@ single-process container that degenerates to full arrays, but the layout
 (one npz per host + shared meta.json) is the multi-host one."""
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
@@ -22,8 +23,38 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def _canonical(obj: Any) -> Any:
+    """JSON-serializable canonical form of a config object: dataclasses
+    become {field: value} dicts tagged with the class name, dicts are
+    key-sorted, numpy scalars unboxed.  Anything else is refused loudly
+    — falling back to repr() would silently embed ``object.__repr__``
+    memory addresses and make the hash differ across processes."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {"__dataclass__": type(obj).__name__,
+                **{f.name: _canonical(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj)}}
+    if isinstance(obj, dict):
+        return {str(k): _canonical(v)
+                for k, v in sorted(obj.items(), key=lambda kv: str(kv[0]))}
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(v) for v in obj]
+    if isinstance(obj, (np.integer, np.floating, np.bool_)):
+        return obj.item()
+    if obj is None or isinstance(obj, (str, int, float, bool)):
+        return obj
+    raise TypeError(
+        f"config_hash cannot canonicalize {type(obj).__name__!r} "
+        f"({obj!r:.80}): pass a dataclass, dict, list/tuple, or JSON "
+        f"scalar — arbitrary objects hash their repr(), which embeds "
+        f"the memory address and breaks cross-process stability")
+
+
 def config_hash(obj: Any) -> str:
-    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+    """Process-stable 16-hex-digit digest of a config: canonical JSON of
+    dataclass/dict fields (sorted keys, no whitespace), never repr()."""
+    payload = json.dumps(_canonical(obj), sort_keys=True,
+                         separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
 def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[Dict] = None,

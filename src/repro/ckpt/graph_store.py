@@ -1,0 +1,243 @@
+"""Graph + executable checkpoint store (disk -> traversing in seconds).
+
+Built on ckpt/checkpoint.py's primitives (atomic tmp+rename publish,
+step directories, retention, meta validation), this store persists the
+two expensive artifacts of a traversal session so a fleet process skips
+both the distributed build and the XLA compile:
+
+  * **graph shards** — the device arrays of a ``Blocked1DGraph`` /
+    ``BlockedGraph`` (host- or device-built) plus enough metadata to
+    reconstruct the dataclass: partition, capacities, per-field
+    shapes/dtypes, and the config hash of the BuildSpec that generated
+    the edges.  Loading with a mesh lands each array directly in its
+    sharded placement (one device_put per field, no repartitioning).
+  * **AOT executables** — ``BFSEngine``'s compiled search program via
+    ``jax.experimental.serialize_executable``, keyed by a canonical
+    config hash over (cfg, partition, statics, mesh axes, shipped keys,
+    jax version).  ``BFSPlan.compile(store=...)`` deserializes on hash
+    hit and persists on miss; a stale hash or absent serializer just
+    recompiles — graph loads, by contrast, FAIL LOUDLY on spec-hash or
+    mesh-shape mismatch (a silently wrong graph is worse than a
+    recompile).
+
+Store layout::
+
+    <root>/graphs/<name>/step_NNNNNNNNNN/{host0.npz, meta.json}
+    <root>/execs/exec_<key>_<hash16>/{payload.bin, trees.pkl, meta.json}
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import tempfile
+import time
+from dataclasses import asdict, is_dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt import checkpoint
+from repro.core.partition import Partition1D, Partition2D
+from repro.graph.formats import Blocked1DGraph, BlockedGraph
+
+try:
+    from jax.experimental import serialize_executable as _serialize_exec
+except Exception:                                    # pragma: no cover
+    _serialize_exec = None
+
+FORMAT_VERSION = 1
+
+_GRAPH_KINDS = {"Blocked1DGraph": Blocked1DGraph,
+                "BlockedGraph": BlockedGraph}
+# dataclass fields that are ints/metadata, not shipped arrays
+_SCALAR_FIELDS = {
+    "Blocked1DGraph": ("cap", "cap_nzc", "maxdeg_col"),
+    "BlockedGraph": ("cap", "cap_seg", "maxdeg_col"),
+}
+
+
+def _mesh_axes(mesh) -> list:
+    return [[str(k), int(v)] for k, v in mesh.shape.items()]
+
+
+def plan_exec_hash(plan) -> str:
+    """Canonical hash of everything that determines the compiled search
+    program: config, partition, static capacities, mesh axes, the keys
+    shipped, and the jax version the executable was built by."""
+    return checkpoint.config_hash({
+        "cfg": plan.cfg, "part": plan.part, "statics": plan.statics,
+        "axes": list(plan.axes), "keys": list(plan.keys),
+        "mesh": _mesh_axes(plan.mesh), "jax": jax.__version__,
+        "format": FORMAT_VERSION})
+
+
+class GraphStore:
+    """One directory of persisted graphs + executables (see module
+    docstring for layout).  ``keep`` bounds retained graph steps per
+    name, exactly as ckpt.checkpoint.save does."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+
+    # ------------------------------------------------------------------
+    # graphs
+    # ------------------------------------------------------------------
+
+    def _graph_dir(self, name: str) -> str:
+        return os.path.join(self.root, "graphs", name)
+
+    def save_graph(self, name: str, graph, spec=None,
+                   step: Optional[int] = None,
+                   extra_meta: Optional[Dict] = None) -> str:
+        """Persist a graph's device arrays + reconstruction metadata
+        under ``graphs/<name>/step_*`` (atomic publish, ``keep``
+        retention).  ``spec`` (e.g. dist_build.BuildSpec) is hashed into
+        the meta so loads can validate they get the graph they asked
+        for."""
+        kind = type(graph).__name__
+        if kind not in _GRAPH_KINDS:
+            raise TypeError(f"cannot store graph of type {kind!r}")
+        part = graph.part
+        arrays = {k: np.asarray(v)
+                  for k, v in graph.device_arrays().items()}
+        if isinstance(part, Partition1D):
+            part_meta = {"kind": "1d", "n": part.n, "n_orig": part.n_orig,
+                         "p": part.p}
+        else:
+            part_meta = {"kind": "2d", "n": part.n, "n_orig": part.n_orig,
+                         "pr": part.pr, "pc": part.pc}
+        meta = {
+            "graph_kind": kind, "format_version": FORMAT_VERSION,
+            "part": json.dumps(part_meta, sort_keys=True),
+            "m": int(graph.m), "m_input": int(graph.m_input),
+            "scalars": json.dumps(
+                {f: int(getattr(graph, f)) for f in _SCALAR_FIELDS[kind]},
+                sort_keys=True),
+            "fields": json.dumps(
+                {k: [list(v.shape), str(v.dtype)]
+                 for k, v in sorted(arrays.items())}),
+            **({"spec_hash": checkpoint.config_hash(spec),
+                "spec": json.dumps(asdict(spec), sort_keys=True)}
+               if is_dataclass(spec) and spec is not None else {}),
+            **(extra_meta or {}),
+        }
+        if step is None:
+            latest = checkpoint.latest_step(self._graph_dir(name))
+            step = 0 if latest is None else latest + 1
+        return checkpoint.save(self._graph_dir(name), step, arrays,
+                               meta=meta, keep=self.keep)
+
+    def load_graph(self, name: str, mesh=None,
+                   step: Optional[int] = None, expect_spec=None,
+                   row_axis: str = "data", col_axis: str = "model"):
+        """Reconstruct a stored graph.  ``expect_spec`` makes a stale
+        graph fail loudly (spec-hash mismatch raises instead of handing
+        back the wrong edges); ``mesh`` validates its axis sizes against
+        the stored partition and lands every array sharded over the
+        graph axes (ready for BFSEngine's no-round-trip ship)."""
+        gdir = self._graph_dir(name)
+        if step is None:
+            step = checkpoint.latest_step(gdir)
+            if step is None:
+                raise FileNotFoundError(f"no graph steps under {gdir}")
+        with open(os.path.join(gdir, f"step_{step:010d}",
+                               "meta.json")) as f:
+            meta = json.load(f)
+        expect = {"format_version": FORMAT_VERSION}
+        if expect_spec is not None:
+            expect["spec_hash"] = checkpoint.config_hash(expect_spec)
+        fields = json.loads(meta["fields"])
+        like = {k: np.zeros(shape, dtype=dt)
+                for k, (shape, dt) in fields.items()}
+        arrays, meta = checkpoint.restore(gdir, step, like,
+                                          expect_meta=expect)
+        part_meta = json.loads(meta["part"])
+        if part_meta["kind"] == "1d":
+            part = Partition1D(n=part_meta["n"], n_orig=part_meta["n_orig"],
+                               p=part_meta["p"])
+            axes, sizes = (row_axis,), (part.p,)
+        else:
+            part = Partition2D(n=part_meta["n"], n_orig=part_meta["n_orig"],
+                               pr=part_meta["pr"], pc=part_meta["pc"])
+            axes, sizes = (row_axis, col_axis), (part.pr, part.pc)
+        if mesh is not None:
+            for ax, want in zip(axes, sizes):
+                have = dict(mesh.shape).get(ax)
+                if have != want:
+                    raise ValueError(
+                        f"stored graph {name!r} was partitioned for "
+                        f"{ax}={want} but the mesh has {ax}={have} "
+                        f"(mesh axes {_mesh_axes(mesh)})")
+            sh = NamedSharding(mesh, P(*axes))
+            arrays = {k: jax.device_put(v, sh) for k, v in arrays.items()}
+        cls = _GRAPH_KINDS[meta["graph_kind"]]
+        return cls(part=part, m_input=meta["m_input"], m=meta["m"],
+                   **json.loads(meta["scalars"]), **arrays)
+
+    # ------------------------------------------------------------------
+    # executables
+    # ------------------------------------------------------------------
+
+    def _exec_dir(self, key: str, h: str) -> str:
+        return os.path.join(self.root, "execs", f"exec_{key}_{h}")
+
+    def save_executable(self, engine, key: str = "default") -> Optional[str]:
+        """Serialize a BFSEngine's compiled single-root search under its
+        plan's config hash (atomic publish).  Returns the path, or None
+        when jax.experimental.serialize_executable is unavailable (the
+        store then persists graphs only)."""
+        if _serialize_exec is None:
+            return None
+        h = plan_exec_hash(engine.plan)
+        payload, in_tree, out_tree = _serialize_exec.serialize(engine._exec)
+        final = self._exec_dir(key, h)
+        os.makedirs(os.path.dirname(final), exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=os.path.dirname(final), prefix=".tmp_")
+        try:
+            with open(os.path.join(tmp, "payload.bin"), "wb") as f:
+                f.write(payload)
+            with open(os.path.join(tmp, "trees.pkl"), "wb") as f:
+                pickle.dump((in_tree, out_tree), f)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"key": key, "hash": h, "jax": jax.__version__,
+                           "saved_at": time.time()}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        return final
+
+    def load_executable(self, plan, key: str = "default"):
+        """The compiled executable previously saved for an equivalent
+        plan (same config hash), or None on miss / absent serializer —
+        BFSPlan.compile then falls back to a fresh XLA compile."""
+        if _serialize_exec is None:
+            return None
+        d = self._exec_dir(key, plan_exec_hash(plan))
+        if not os.path.isdir(d):
+            return None
+        with open(os.path.join(d, "payload.bin"), "rb") as f:
+            payload = f.read()
+        with open(os.path.join(d, "trees.pkl"), "rb") as f:
+            in_tree, out_tree = pickle.load(f)
+        return _serialize_exec.deserialize_and_load(payload, in_tree,
+                                                    out_tree)
+
+
+def plan_bfs_from_store(store: GraphStore, name: str, cfg, mesh,
+                        expect_spec=None, **plan_kw):
+    """The disk -> traversal entry point: load a stored graph sharded
+    onto ``mesh`` and plan a session over it.  Chain with
+    ``.compile(store=store)`` to also reuse the stored executable."""
+    from repro.core.engine import plan_bfs
+    graph = store.load_graph(name, mesh=mesh, expect_spec=expect_spec,
+                             row_axis=plan_kw.get("row_axis", "data"),
+                             col_axis=plan_kw.get("col_axis", "model"))
+    return plan_bfs(graph, cfg, mesh, **plan_kw)

@@ -295,6 +295,60 @@ def strip_dcsc_pointer_words(nzc_total: float, p: int) -> float:
     return 2.0 * float(nzc_total) + 2.0 * p
 
 
+# ---------------------------------------------------------------------------
+# Build-phase (distributed graph construction) closed forms
+# ---------------------------------------------------------------------------
+
+
+def build_route_1d_words(m_input: int, p: int) -> float:
+    """Expected owner-routing volume of the 1D distributed build: every
+    generated edge is emitted in both directions (symmetrization happens
+    before routing, 2*m_input records), each record is one 64-bit word
+    (two i32 endpoints), and a uniformly partitioned destination leaves
+    a (p-1)/p fraction remote.  One all_to_all round."""
+    return 2.0 * m_input * (p - 1) / p
+
+
+def build_route_2d_words(m_input: int, pr: int, pc: int) -> float:
+    """Expected two-hop routing volume of the 2D build: hop 1 moves each
+    record to its block COLUMN owner along the pc-sized axis, hop 2 to
+    its block ROW owner along the pr-sized axis — the same record count
+    as 1D, charged per hop."""
+    return 2.0 * m_input * ((pc - 1) / pc + (pr - 1) / pr)
+
+
+def build_route_padded_words(p: int, cap_route: int) -> float:
+    """Actual shipped volume of one capped all_to_all routing round:
+    every device ships its full (p, cap_route) record buckets minus the
+    diagonal, regardless of fill — the static-shape tax the expected
+    forms above are compared against."""
+    return float(p) * (p - 1) * cap_route
+
+
+def rmat_strip_skew(p: int, a: float = 0.57, b: float = 0.19) -> float:
+    """Expected fraction of R-MAT edge endpoints owned by the heaviest
+    1/p vertex range (the low-id strip): each of the log2(p) leading
+    quadrant draws lands in the top half with probability a+b, so strip
+    0 receives ~(a+b)**log2(p) of all endpoints — the factor a uniform
+    cap_route must be inflated by before skewed routing fits."""
+    import math
+    if p <= 1:
+        return 1.0
+    return float((a + b) ** math.log2(p))
+
+
+def plan_cap_route(records: int, p: int, a: float = 0.57, b: float = 0.19,
+                   slack: float = 1.5, pad: int = 32) -> int:
+    """Static per-destination bucket capacity for one routing round:
+    ``records`` locally generated records spread over p buckets whose
+    heaviest takes ~rmat_strip_skew(p), inflated by ``slack`` for
+    sampling noise.  Overflow is detected on device and raised loudly —
+    the build never silently drops an edge."""
+    frac = max(rmat_strip_skew(p, a, b), 1.0 / max(p, 1))
+    cap = int(slack * frac * records) + pad
+    return ((cap + pad - 1) // pad) * pad
+
+
 @dataclass(frozen=True)
 class AlphaBeta:
     """Machine terms for the latency/bandwidth model. Defaults are TPU v5e

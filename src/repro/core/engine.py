@@ -172,10 +172,16 @@ class BFSPlan:
 
     # ---- session ----------------------------------------------------------
 
-    def compile(self) -> "BFSEngine":
+    def compile(self, store=None, exec_key: str = "default") -> "BFSEngine":
         """Ship the graph and compile the search program (both once);
-        the returned engine runs any number of roots against them."""
-        return BFSEngine(self)
+        the returned engine runs any number of roots against them.
+
+        ``store`` (a ckpt.graph_store.GraphStore) short-circuits the XLA
+        compile: a serialized executable saved under ``exec_key`` whose
+        config hash + mesh shape match this plan is deserialized instead
+        (``engine.exec_load_s`` / ``exec_from_store`` report it), and a
+        fresh compile is persisted back so the next process loads."""
+        return BFSEngine(self, store=store, exec_key=exec_key)
 
 
 def plan_for_part(part, cfg: BFSConfig, mesh, *,
@@ -307,7 +313,7 @@ class BFSEngine:
                       run/run_many never add more — asserted by tests)
     """
 
-    def __init__(self, plan: BFSPlan):
+    def __init__(self, plan: BFSPlan, store=None, exec_key: str = "default"):
         if plan.graph is None:
             raise ValueError("plan has no graph attached; build it with "
                              "plan_bfs(graph, cfg, mesh)")
@@ -316,12 +322,27 @@ class BFSEngine:
         sh = NamedSharding(plan.mesh, P(*plan.axes))
         arrays = plan.graph.device_arrays()
         t0 = time.perf_counter()
-        self._gdev = {k: jax.device_put(np.asarray(arrays[k]), sh)
-                      for k in plan.keys}
+        # born-sharded jax.Arrays (device builds, store loads) pass
+        # through without a host round-trip — device_put on a correctly
+        # sharded array is a no-op, on a mis-sharded one a reshard
+        self._gdev = {k: jax.device_put(
+            arrays[k] if isinstance(arrays[k], jax.Array)
+            else np.asarray(arrays[k]), sh) for k in plan.keys}
         for v in self._gdev.values():
             v.block_until_ready()
         t1 = time.perf_counter()
         self.ship_s = t1 - t0
+        self.exec_load_s = 0.0
+        self.exec_from_store = False
+        if store is not None:
+            self._exec = store.load_executable(plan, exec_key)
+            if self._exec is not None:
+                self.exec_from_store = True
+                self.exec_load_s = time.perf_counter() - t1
+                self.compile_s = 0.0
+                self.batch_compile_s = 0.0
+                self._batch_cache: Dict[Tuple[str, int], Any] = {}
+                return
         fn = plan.build_fn(trace_hook=self._count_trace)
         # AOT lower+compile: the trace happens here exactly once, and
         # run() calls the compiled executable directly — per-root time
@@ -330,6 +351,8 @@ class BFSEngine:
         self.compile_s = time.perf_counter() - t1
         self.batch_compile_s = 0.0
         self._batch_cache: Dict[Tuple[str, int], Any] = {}
+        if store is not None:
+            store.save_executable(self, exec_key)
 
     def _count_trace(self):
         self.trace_count += 1

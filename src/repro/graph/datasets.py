@@ -12,16 +12,39 @@ from typing import Dict
 import numpy as np
 
 from repro.configs.base import GNNConfig, GNNShape
-from repro.graph.rmat import rmat_graph
+from repro.graph.rmat import rmat_edges_counter, rmat_graph
+
+# host materialization bounds: full rmat_graph up to here (the legacy
+# stream every pinned graph uses), counter-stream slices beyond
+_MAX_HOST_SCALE = 16
+_MAX_HOST_EF = 64
+_MAX_COUNTER_SCALE = 30   # int32 vertex-id ceiling of the counter stream
 
 
 def _edges_for(n_nodes: int, n_edges: int, seed: int = 0):
-    rng = np.random.default_rng(seed)
     scale = max(int(np.ceil(np.log2(max(n_nodes, 2)))), 2)
     ef = max(1, n_edges // (1 << scale))
-    e = rmat_graph(min(scale, 16), edge_factor=min(ef, 64), seed=seed)
-    s = (e.src % n_nodes).astype(np.int32)
-    d = (e.dst % n_nodes).astype(np.int32)
+    if scale <= _MAX_HOST_SCALE and ef <= _MAX_HOST_EF:
+        # legacy level-vectorized stream: pinned small graphs unchanged
+        e = rmat_graph(scale, edge_factor=ef, seed=seed)
+        s, d = e.src, e.dst
+    elif scale <= _MAX_COUNTER_SCALE and (ef << scale) < 2 ** 32:
+        # large request: slice exactly the edges needed from the
+        # counter-based stream — O(n_edges) memory at any scale, never
+        # a silently clamped smaller workload
+        s, d = rmat_edges_counter(scale, edge_factor=ef, seed=seed,
+                                  start=0, count=min(n_edges, ef << scale))
+    else:
+        raise ValueError(
+            f"requested graph needs R-MAT scale={scale}, "
+            f"edge_factor={ef} (n_nodes={n_nodes}, n_edges={n_edges}), "
+            f"beyond the counter stream's limits (scale <= "
+            f"{_MAX_COUNTER_SCALE}, edge_factor*2^scale < 2^32); build "
+            f"it with graph.dist_build instead of _edges_for — earlier "
+            f"versions silently clamped to scale<=16/edge_factor<=64, "
+            f"which changed the workload without warning")
+    s = (s % n_nodes).astype(np.int32)
+    d = (d % n_nodes).astype(np.int32)
     if s.size >= n_edges:
         return s[:n_edges], d[:n_edges]
     reps = int(np.ceil(n_edges / s.size))

@@ -41,6 +41,7 @@ from __future__ import annotations
 from dataclasses import dataclass, fields
 from typing import Any, Dict
 
+import jax
 import numpy as np
 
 from repro.core.partition import (Partition1D, Partition2D, make_partition,
@@ -81,12 +82,16 @@ class BlockedGraph:
     maxdeg_col: int       # max CSC column-segment length over all blocks
 
     # ------------------------------------------------------------------
-    def device_arrays(self) -> Dict[str, np.ndarray]:
-        """The pytree of arrays shipped to devices (everything but part/ints)."""
+    def device_arrays(self) -> Dict[str, Any]:
+        """The pytree of arrays shipped to devices (everything but
+        part/ints).  Fields may be host np.ndarrays (host-built graphs)
+        or already-sharded jax.Arrays (born-sharded device builds /
+        store loads) — the engine ships the former and passes the
+        latter through without a host round-trip."""
         out = {}
         for f in fields(self):
             v = getattr(self, f.name)
-            if isinstance(v, np.ndarray):
+            if isinstance(v, (np.ndarray, jax.Array)):
                 out[f.name] = v
         return out
 
@@ -147,11 +152,11 @@ class Blocked1DGraph:
     maxdeg_col: int       # max CSC column-segment length over all strips
     col_ptr: "np.ndarray | None" = None   # (p, n+1) i32, the §5.1 blow-up
 
-    def device_arrays(self) -> Dict[str, np.ndarray]:
+    def device_arrays(self) -> Dict[str, Any]:
         out = {}
         for f in fields(self):
             v = getattr(self, f.name)
-            if isinstance(v, np.ndarray):
+            if isinstance(v, (np.ndarray, jax.Array)):
                 out[f.name] = v
         return out
 

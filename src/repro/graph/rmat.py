@@ -4,6 +4,22 @@ Parameters follow the paper (§7.2): a,b,c,d = 0.57,0.19,0.19,0.05 and
 edge factor (average degree) 16 unless stated.  ``scale`` means 2**scale
 vertices.  Preprocessing prunes self loops and duplicate edges (the paper
 does the same); graphs are used undirected, so edges are symmetrized.
+
+Two generators coexist:
+
+  * ``rmat_edges`` — the original sequential ``np.random.default_rng``
+    level-draw generator; kept verbatim so every pinned bench/test
+    graph is unchanged.
+  * ``rmat_edges_counter`` (+ jax/Pallas twins) — a STATELESS
+    counter-based generator: edge e's quadrant path is a pure function
+    of (seed, e, level) through a uint32 bit-mixing hash, so any slice
+    [start, start+count) of the edge stream is reproducible
+    independently of how many shards the stream is split over.  This is
+    the reproducibility contract the distributed device-side build
+    (graph/dist_build.py) relies on: shard k of p generates edges
+    [k*m/p, (k+1)*m/p) and the union is bit-identical for every p.
+    The numpy and jnp implementations are bit-identical (pure uint32
+    wrapping arithmetic, thresholds precomputed as Python ints).
 """
 from __future__ import annotations
 
@@ -11,6 +27,78 @@ from dataclasses import dataclass
 from typing import Tuple
 
 import numpy as np
+
+_M32 = 0xFFFFFFFF
+_GOLDEN = 0x9E3779B9          # counter -> hash stream spreading constant
+
+
+def _mix_int(x: int) -> int:
+    """fmix32-style avalanche on a Python int (mod 2**32)."""
+    x &= _M32
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & _M32
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & _M32
+    x ^= x >> 16
+    return x
+
+
+def level_salt(seed: int, level: int) -> int:
+    """Per-(seed, level) salt for the counter hash — a Python int so the
+    numpy / jnp / Pallas twins consume literally the same constant."""
+    return _mix_int((int(seed) * 0x85EBCA6B + level * 0xC2B2AE35
+                     + 0x27D4EB2F) & _M32)
+
+
+def rmat_thresholds(a: float, b: float, c: float) -> Tuple[int, int, int]:
+    """Cumulative quadrant thresholds as exact uint32 comparands: a draw
+    u ~ U[0, 2**32) picks quadrant a/b/c/d by u < t1 / t2 / t3 / else."""
+    t1 = min(int(round(a * 2.0 ** 32)), _M32)
+    t2 = min(int(round((a + b) * 2.0 ** 32)), _M32)
+    t3 = min(int(round((a + b + c) * 2.0 ** 32)), _M32)
+    return t1, t2, t3
+
+
+def _counter_u32_np(idx: np.ndarray, salt: int) -> np.ndarray:
+    """One uint32 hash draw per counter (numpy twin of the jnp mixer)."""
+    x = (idx * np.uint32(_GOLDEN)) ^ np.uint32(salt)
+    x ^= x >> np.uint32(16)
+    x = x * np.uint32(0x7FEB352D)
+    x ^= x >> np.uint32(15)
+    x = x * np.uint32(0x846CA68B)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def rmat_edges_counter(scale: int, edge_factor: int = 16, a: float = 0.57,
+                       b: float = 0.19, c: float = 0.19, seed: int = 1,
+                       start: int = 0, count: int | None = None,
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Edges [start, start+count) of the counter-based R-MAT stream of
+    m_input = edge_factor * 2**scale edges, as int64 (src, dst).
+
+    The slice is a pure function of (scale, ef, a, b, c, seed, start,
+    count): generating the full stream in one call or in any shard
+    split yields bit-identical edges."""
+    m_input = edge_factor << scale
+    if count is None:
+        count = m_input - start
+    if not 0 <= start <= start + count <= m_input:
+        raise ValueError(f"slice [{start}, {start + count}) outside the "
+                         f"{m_input}-edge stream")
+    t1, t2, t3 = rmat_thresholds(a, b, c)
+    idx = (np.arange(count, dtype=np.uint32)
+           + np.uint32(start & _M32))          # counter mod 2**32
+    src = np.zeros(count, dtype=np.int64)
+    dst = np.zeros(count, dtype=np.int64)
+    for level in range(scale):
+        u = _counter_u32_np(idx, level_salt(seed, level))
+        src_bit = u >= np.uint32(t2)
+        dst_bit = ((u >= np.uint32(t1)) & (u < np.uint32(t2))) \
+            | (u >= np.uint32(t3))
+        src |= src_bit.astype(np.int64) << level
+        dst |= dst_bit.astype(np.int64) << level
+    return src, dst
 
 
 @dataclass(frozen=True)
@@ -52,6 +140,99 @@ def rmat_edges(scale: int, edge_factor: int = 16, a: float = 0.57,
     return src, dst
 
 
+def rmat_edges_counter_jax(scale: int, count: int, start,
+                           edge_factor: int = 16, a: float = 0.57,
+                           b: float = 0.19, c: float = 0.19, seed: int = 1):
+    """jnp twin of ``rmat_edges_counter``: (src, dst) int32 arrays of
+    ``count`` edges starting at traced/static ``start``.  Pure uint32
+    wrapping arithmetic — bit-identical to the numpy twin — and safe
+    under disabled x64 (scale <= 30 fits int32).  This is the per-shard
+    generator the distributed build maps over devices."""
+    import jax.numpy as jnp
+    if scale > 30:
+        raise ValueError(f"scale={scale} > 30 overflows int32 vertex ids "
+                         f"on x64-disabled devices")
+    t1, t2, t3 = rmat_thresholds(a, b, c)
+    idx = (jnp.arange(count, dtype=jnp.uint32)
+           + jnp.asarray(start, jnp.uint32))
+    src = jnp.zeros(count, dtype=jnp.int32)
+    dst = jnp.zeros(count, dtype=jnp.int32)
+    for level in range(scale):
+        x = (idx * jnp.uint32(_GOLDEN)) ^ jnp.uint32(level_salt(seed, level))
+        x ^= x >> jnp.uint32(16)
+        x = x * jnp.uint32(0x7FEB352D)
+        x ^= x >> jnp.uint32(15)
+        x = x * jnp.uint32(0x846CA68B)
+        x ^= x >> jnp.uint32(16)
+        src_bit = x >= jnp.uint32(t2)
+        dst_bit = ((x >= jnp.uint32(t1)) & (x < jnp.uint32(t2))) \
+            | (x >= jnp.uint32(t3))
+        src = src | (src_bit.astype(jnp.int32) << level)
+        dst = dst | (dst_bit.astype(jnp.int32) << level)
+    return src, dst
+
+
+def rmat_edges_counter_kernel(scale: int, count: int, start,
+                              edge_factor: int = 16, a: float = 0.57,
+                              b: float = 0.19, c: float = 0.19,
+                              seed: int = 1, tile: int = 4096,
+                              interpret: bool = True):
+    """Pallas build of the per-shard counter generator: a grid program
+    over ``tile``-edge blocks, each an independent VPU-width batch of
+    uint32 mixing (no cross-tile state — the whole point of the
+    counter RNG).  Bit-identical to the jnp/numpy twins; kept
+    ``interpret=True`` by default for CPU CI, matching kernels/*.
+
+    The TPU core PRNG (pltpu.prng_random_bits) is deliberately NOT used:
+    its stream depends on how work is split over cores, which would
+    break the shard-count-independence contract."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    if scale > 30:
+        raise ValueError(f"scale={scale} > 30 overflows int32 vertex ids")
+    if count % tile:
+        tile = count if count < tile else \
+            next(t for t in range(tile, 0, -1) if count % t == 0)
+    t1, t2, t3 = rmat_thresholds(a, b, c)
+    salts = tuple(level_salt(seed, lv) for lv in range(scale))
+
+    def kernel(start_ref, src_ref, dst_ref):
+        pid = pl.program_id(0)
+        base = start_ref[0] + (pid * tile).astype(jnp.uint32)
+        idx = jnp.arange(tile, dtype=jnp.uint32) + base
+        s = jnp.zeros(tile, dtype=jnp.int32)
+        d = jnp.zeros(tile, dtype=jnp.int32)
+        for level in range(scale):
+            x = (idx * jnp.uint32(_GOLDEN)) ^ jnp.uint32(salts[level])
+            x ^= x >> jnp.uint32(16)
+            x = x * jnp.uint32(0x7FEB352D)
+            x ^= x >> jnp.uint32(15)
+            x = x * jnp.uint32(0x846CA68B)
+            x ^= x >> jnp.uint32(16)
+            sb = (x >= jnp.uint32(t2)).astype(jnp.int32)
+            db = (((x >= jnp.uint32(t1)) & (x < jnp.uint32(t2)))
+                  | (x >= jnp.uint32(t3))).astype(jnp.int32)
+            s = s | (sb << level)
+            d = d | (db << level)
+        src_ref[...] = s
+        dst_ref[...] = d
+
+    start = jnp.asarray(start, jnp.uint32).reshape(1)
+    out = jax.ShapeDtypeStruct((count,), jnp.int32)
+    src, dst = pl.pallas_call(
+        kernel,
+        grid=(count // tile,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],  # start scalar
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 2,
+        out_shape=[out, out],
+        interpret=interpret,
+    )(start)
+    return src, dst
+
+
 def preprocess(src: np.ndarray, dst: np.ndarray, n: int,
                symmetrize: bool = True) -> EdgeList:
     """Prune self-loops + duplicates; optionally symmetrize (undirected)."""
@@ -66,8 +247,21 @@ def preprocess(src: np.ndarray, dst: np.ndarray, n: int,
 
 
 def rmat_graph(scale: int, edge_factor: int = 16, seed: int = 1,
-               a: float = 0.57, b: float = 0.19, c: float = 0.19) -> EdgeList:
-    src, dst = rmat_edges(scale, edge_factor, a, b, c, seed)
+               a: float = 0.57, b: float = 0.19, c: float = 0.19,
+               generator: str = "numpy") -> EdgeList:
+    """Host-side generate + preprocess.  ``generator="numpy"`` is the
+    original sequential-RNG stream (every pinned graph in the repo);
+    ``generator="counter"`` draws the stateless counter stream — the
+    SAME edges the distributed device build generates, so host-built and
+    device-built graphs at one (scale, ef, seed) are comparable
+    bit-for-bit."""
+    if generator == "numpy":
+        src, dst = rmat_edges(scale, edge_factor, a, b, c, seed)
+    elif generator == "counter":
+        src, dst = rmat_edges_counter(scale, edge_factor, a, b, c, seed)
+    else:
+        raise ValueError(f"unknown generator {generator!r} "
+                         f"(have 'numpy', 'counter')")
     return preprocess(src, dst, 1 << scale)
 
 

@@ -466,6 +466,61 @@ def main():
                     assert rf.n_levels == refs[i].n_levels, key
                     assert rf.counters == {}, key
         print("OK pipelined")
+    elif mode == "born":
+        # born-sharded graphs on 16 devices: the device-side distributed
+        # build must be BIT-IDENTICAL to the host builders on the same
+        # counter stream in every decomposition (arrays, capacities,
+        # degree distribution, m/m_input), traverse to the same parents,
+        # and a scale-18 graph must build end-to-end on device (no
+        # host-side edge materialization), round-trip the graph store,
+        # and traverse.
+        import tempfile
+        from repro.ckpt.graph_store import GraphStore, plan_bfs_from_store
+        from repro.core.engine import plan_bfs
+        from repro.graph.dist_build import BuildSpec, dist_build
+
+        spec = BuildSpec(scale=10, edge_factor=16, seed=3)
+        edges = rmat_graph(spec.scale, edge_factor=spec.edge_factor,
+                           seed=spec.seed, generator="counter")
+        gh1 = build_blocked_1d(edges, n_dev, align=32, cap_pad=32)
+        gh2 = build_blocked(edges, 4, 4, align=32, cap_pad=32)
+        mesh1 = make_local_mesh_1d(n_dev)
+        mesh2 = make_local_mesh(4, 4)
+        gd1, _ = dist_build(spec, "1d", mesh1, n_dev, align=32, cap_pad=32)
+        gd2, _ = dist_build(spec, "2d", mesh2, (4, 4), align=32,
+                            cap_pad=32)
+        for gd, gh in ((gd1, gh1), (gd2, gh2)):
+            assert gd.m == gh.m and gd.m_input == gh.m_input
+            assert (gd.cap, gd.maxdeg_col) == (gh.cap, gh.maxdeg_col)
+            ha = gh.device_arrays()
+            for k, v in gd.device_arrays().items():
+                assert np.array_equal(np.asarray(v), np.asarray(ha[k])), k
+        assert np.array_equal(                 # degree histogram over V
+            np.bincount(np.asarray(gd1.deg_A).ravel()),
+            np.bincount(np.asarray(gh1.deg_A).ravel()))
+        for decomp, gd, gh, mesh in (("1d", gd1, gh1, mesh1),
+                                     ("1ds", gd1, gh1, mesh1),
+                                     ("2d", gd2, gh2, mesh2)):
+            cfg = BFSConfig(decomposition=decomp)
+            rd = plan_bfs(gd, cfg, mesh).compile().run(5)
+            rh = plan_bfs(gh, cfg, mesh).compile().run(5)
+            assert np.array_equal(rd.parents, rh.parents), decomp
+            ok, msg = validate_parents(edges.n, edges.src, edges.dst, 5,
+                                       rd.parents)
+            assert ok, (decomp, msg)
+
+        spec18 = BuildSpec(scale=18, edge_factor=16, seed=1)
+        g18, info = dist_build(spec18, "1d", mesh1, n_dev)
+        assert info["m"] > spec18.m_input      # symmetrized unique edges
+        store = GraphStore(tempfile.mkdtemp())
+        store.save_graph("s18", g18, spec=spec18)
+        plan = plan_bfs_from_store(
+            store, "s18", BFSConfig(decomposition="1d", instrument=False),
+            mesh1, expect_spec=spec18)
+        res = plan.compile(store=store).run(
+            int(np.argmax(np.asarray(g18.deg_A).ravel())))
+        assert int((res.parents >= 0).sum()) > spec18.n // 4
+        print("OK born")
     elif mode == "multiroot":
         edges = rmat_graph(10, edge_factor=8, seed=9)
         rng = np.random.default_rng(0)

@@ -27,7 +27,8 @@ def _run(n_dev, mode, timeout=1200):
 
 @pytest.mark.parametrize("mode", ["grids", "kernel", "counters",
                                   "multiroot", "optimized", "multipod",
-                                  "podheur", "fastpath", "pipelined"])
+                                  "podheur", "fastpath", "pipelined",
+                                  "born"])
 def test_distributed_bfs(mode):
     _run(16, mode)
 
