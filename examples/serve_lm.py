@@ -2,10 +2,8 @@
 
     PYTHONPATH=src python examples/serve_lm.py
 """
-import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config, reduced

@@ -11,7 +11,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.data.pipeline import lm_batch

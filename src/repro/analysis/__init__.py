@@ -1,0 +1,36 @@
+"""Static analysis of the SPMD collective schedule (the linter).
+
+The latency analysis (paper §6, Buluç & Madduri arXiv 1104.4518) makes
+the per-level collective *schedule* a first-class artifact, and PR 4
+found — by hand — that a per-pod-divergent direction decision deadlocks
+any entry whose collectives rendezvous with the whole mesh (the 2d
+ppermutes).  This package turns both hazards into machine-checked
+rules over the closed jaxpr and the lowered HLO of every registered
+decomposition combo:
+
+  R1 divergent-collective   a collective reachable under a cond/while
+                            predicate not provably uniform over the
+                            axes it rendezvouses on (deadlock hazard —
+                            makes decomp's ``sync_modes`` *checked*)
+  R2 branch-schedule-mismatch  cond branches issue different
+                            (kind, axes) collective sequences while
+                            the predicate can diverge over axes those
+                            collectives rendezvous on
+  R3 unknown-axis/pod-leak  collectives over axes outside the entry's
+                            declared layout; graph data crossing the
+                            pod axis; entries under-declaring their
+                            ``rendezvous_axes`` contract
+  R4 budget-drift           lowered-HLO collective counts vs
+                            ``comm_model.level_collective_budget``,
+                            auto-enumerated from the registry
+                            (one source of truth for test_perf_guard)
+
+Entry points: ``python -m repro.analysis.lint`` (CLI, JSON + human
+output), ``BFSPlan.lint()`` (core/engine.py), and the pieces —
+``uniformity.analyze_jaxpr`` (the mesh-uniformity lattice),
+``rules`` (findings), ``registry`` (combo/budget enumeration),
+``fixtures`` (the reintroduced pre-PR-4 divergent 2d entry).
+
+This __init__ deliberately imports nothing: the CLI must pin the
+forced host-device count BEFORE anything drags jax in.
+"""

@@ -1,0 +1,91 @@
+"""The deliberately-broken decomposition the linter must catch.
+
+PR 4 fixed a latent deadlock: the 2d entry's direction heuristic made
+its td/bu decision from a psum over the GRAPH axes only, so in a
+pod-batched mesh each pod could pick a different branch — and the 2d
+step bodies ppermute, which XLA lowers as a whole-mesh rendezvous, so
+a divergent pod waits forever on a collective its peers never issue.
+The fix (``sync_modes=True`` in core/decomp.py) pmax/pmins the
+decision over the sync axes.
+
+This module reintroduces that bug under a test-only registry name:
+``_bfs_body_2d`` with ``sync_modes=False`` — per-slice decisions
+driving whole-mesh ppermutes.  ``divergent_2d_fixture()`` registers it
+(plus a mirrored LocalOps entry) for the duration of a with-block and
+restores the registry on exit, so ``registered_decompositions()``
+stays exactly ("1d", "1ds", "2d") for every other test.  The linter's
+R1 rule must flag it; tests/test_analysis_lint.py and the CLI's
+``--expect-fixture`` self-check both assert that it does — proof the
+linter can catch the bug class it exists for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Optional
+
+from jax import lax
+import jax.numpy as jnp
+
+FIXTURE_NAME = "2d-divergent-fixture"
+
+
+def _divergent_body_2d(g, root, *, part, args, cfg,
+                       sync_axis: Optional[str] = None):
+    """_bfs_body_2d with the pre-PR-4 bug: sync_modes=False lets each
+    pod slice switch direction on its own psum — divergent branches
+    around whole-mesh ppermutes."""
+    from repro.core.decomp import _search_loop
+    from repro.core.steps import bottomup_level, topdown_level
+    pc, chunk = part.pc, part.chunk
+    axes = (args.row_axis, args.col_axis)
+    sync = axes + ((sync_axis,) if sync_axis else ())
+    i = lax.axis_index(args.row_axis)
+    j = lax.axis_index(args.col_axis)
+    g = {k: v[0, 0] for k, v in g.items()}
+
+    gidx = ((i * pc + j) * chunk + jnp.arange(chunk)).astype(jnp.int32)
+    pi, level, ctr, stats = _search_loop(
+        g, gidx, root, n_total=part.n, cfg=cfg, axes=axes, sync=sync,
+        td_level=lambda pi, f, lv=None: topdown_level(g, pi, f, args, lv),
+        bu_level=lambda pi, f, lv=None: bottomup_level(g, pi, f, args, lv),
+        # THE BUG: per-slice direction decisions, whole-mesh ppermutes
+        sync_modes=False)
+    return pi[None, None], level, ctr, stats
+
+
+@contextmanager
+def divergent_2d_fixture():
+    """Scoped registration of the broken entry (+ a dense/csr LocalOps
+    mirror so plans resolve); yields the Decomposition.  The registry
+    is restored on exit no matter what."""
+    from repro.core import decomp, local_ops
+    entry = dataclasses.replace(
+        decomp.get_decomposition("2d"), name=FIXTURE_NAME,
+        body=_divergent_body_2d)
+    decomp.register_decomposition(entry)
+    mirrored = []
+    try:
+        for d, lm, st in local_ops.registered_combos():
+            if d == "2d" and lm == "dense":
+                src = local_ops.get_local_ops(d, lm, st)
+                local_ops.register_local_ops(
+                    dataclasses.replace(src, decomposition=FIXTURE_NAME))
+                mirrored.append((FIXTURE_NAME, lm, st))
+        yield entry
+    finally:
+        for key in mirrored:
+            local_ops.unregister_local_ops(*key)
+        decomp.unregister_decomposition(FIXTURE_NAME)
+
+
+def lint_fixture(instrument: bool = False):
+    """Lint the broken entry's pod-batched program; returns the
+    findings (callers assert R1 is among them)."""
+    from repro.analysis.registry import lint_plan, plan_case
+    with divergent_2d_fixture():
+        plan = plan_case(FIXTURE_NAME, {}, instrument=instrument,
+                         batched=True)
+        return lint_plan(plan, pod_axis="pod",
+                         combo=f"{FIXTURE_NAME}/"
+                               f"{'instr' if instrument else 'fast'}")

@@ -1,0 +1,115 @@
+"""CLI for the SPMD collective-schedule linter.
+
+    python -m repro.analysis.lint [--json REPORT.json] [--quick]
+                                  [--no-budgets] [--expect-fixture]
+                                  [--devices N]
+
+Walks every registered decomposition combo's pod-batched program
+(rules R1–R3 over the closed jaxpr) and the registry budget
+enumeration (rule R4 over lowered HLO, no XLA compile), prints a human
+summary, optionally writes the full JSON report, and exits non-zero on
+any finding.  ``--expect-fixture`` additionally lints the
+deliberately-broken pre-PR-4 2d entry and FAILS if rule R1 does *not*
+flag it — the linter proving it can catch the deadlock class it
+exists for.
+
+Run from a fresh process: ``--devices`` forces that many host devices
+(the default 16 fits the 2x4-grid / 8-strip × 2-pod meshes the
+enumeration traces against) and must be applied before jax
+initializes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _force_devices(n: int) -> None:
+    """Pin the forced host-device count.  XLA reads XLA_FLAGS when the
+    backend first initializes (the first jax.devices()/trace), not at
+    import — so setting the env var here works as long as nothing has
+    touched the backend yet; if something has, fail loudly rather than
+    trace against too few devices."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+    import jax
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"jax initialized with {len(jax.devices())} devices but the "
+            f"registry lint needs {n}; run the CLI in a fresh process "
+            f"(or pass --devices)")
+
+
+def _print_findings(findings) -> None:
+    for f in findings:
+        print(f"  [{f['rule']}] {f['combo']}: {f['message']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static SPMD collective-schedule lint of every "
+                    "registered decomposition combo")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full JSON report here")
+    ap.add_argument("--quick", action="store_true",
+                    help="one representative combo per entry (fast)")
+    ap.add_argument("--no-budgets", action="store_true",
+                    help="skip the R4 budget lowering sweep")
+    ap.add_argument("--expect-fixture", action="store_true",
+                    help="also lint the broken pre-PR-4 2d fixture and "
+                         "fail unless R1 flags it")
+    ap.add_argument("--devices", type=int, default=16,
+                    help="forced host device count (default 16)")
+    args = ap.parse_args(argv)
+
+    _force_devices(args.devices)
+    # heavy imports only after the device count is pinned
+    from repro.analysis.fixtures import FIXTURE_NAME, lint_fixture
+    from repro.analysis.registry import lint_registry
+
+    report = lint_registry(quick=args.quick,
+                           with_budgets=not args.no_budgets)
+    rc = 0
+    n_combos = len(report["combos"])
+    if report["clean"]:
+        print(f"lint: {n_combos} registry combos clean"
+              + ("" if args.no_budgets else
+                 f", {len(report.get('budget_cases', []))} budget cases "
+                 f"within comm_model budgets"))
+    else:
+        print(f"lint: {report['n_findings']} finding(s) across "
+              f"{n_combos} combos:")
+        _print_findings(report["findings"])
+        rc = 1
+
+    if args.expect_fixture:
+        fix = [f.to_json() for f in lint_fixture(instrument=False)]
+        fix += [f.to_json() for f in lint_fixture(instrument=True)]
+        report["fixture"] = {"name": FIXTURE_NAME, "findings": fix}
+        r1 = [f for f in fix if f["rule"] == "R1"
+              and f["detail"].get("collective") == "ppermute"]
+        if r1:
+            print(f"fixture: R1 correctly flags {FIXTURE_NAME} "
+                  f"({len(r1)} divergent-ppermute finding(s)), e.g.:")
+            _print_findings(r1[:1])
+        else:
+            print(f"fixture: FAILED — R1 did not flag {FIXTURE_NAME}; "
+                  f"the linter cannot catch the deadlock class it "
+                  f"exists for")
+            _print_findings(fix)
+            rc = 1
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"report written to {args.json}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

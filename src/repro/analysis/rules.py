@@ -1,0 +1,218 @@
+"""Lint rules over a uniformity analysis (R1–R3) and lowered-HLO
+collective counts (R4).  Each rule returns ``Finding``s — structured,
+JSON-serializable, and specific enough to act on (the offending
+collective, the non-uniform predicate and its provenance, the axes
+that can diverge).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.uniformity import MISMATCH, Analysis
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str                 # "R1" | "R2" | "R3" | "R4"
+    combo: str                # which registry combo / program tripped it
+    message: str              # one-line human statement of the defect
+    detail: Dict = field(default_factory=dict)
+
+    def to_json(self) -> Dict:
+        return asdict(self)
+
+
+def _fmt_axes(axes) -> str:
+    return "(" + ", ".join(repr(a) for a in sorted(axes)) + ")"
+
+
+# ---------------------------------------------------------------------------
+# R1: divergent-collective (the PR 4 deadlock class)
+# ---------------------------------------------------------------------------
+
+
+def check_divergent_collectives(an: Analysis, combo: str) -> List[Finding]:
+    """A collective under a cond/while predicate must have that
+    predicate provably uniform over every axis the op rendezvouses on;
+    otherwise some devices enter the rendezvous while others took the
+    other branch (or left the loop) — they wait forever."""
+    findings = []
+    for site in an.sites:
+        rendezvous = set(site.rendezvous(an.mesh_axes))
+        for pred in site.preds:
+            missing = rendezvous - pred.unif
+            if not missing:
+                continue
+            findings.append(Finding(
+                rule="R1", combo=combo,
+                message=(
+                    f"{site.kind} over {site.axes!r} rendezvouses on "
+                    f"{_fmt_axes(rendezvous)} but is guarded by a "
+                    f"{pred.kind} predicate only uniform over "
+                    f"{_fmt_axes(pred.unif)} — devices may diverge over "
+                    f"{_fmt_axes(missing)} and deadlock"),
+                detail={
+                    "collective": site.kind,
+                    "op_axes": list(site.axes),
+                    "rendezvous_axes": sorted(rendezvous),
+                    "predicate": pred.desc,
+                    "predicate_kind": pred.kind,
+                    "predicate_uniform_over": sorted(pred.unif),
+                    "divergent_axes": sorted(missing),
+                    "path": site.path,
+                }))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R2: branch-schedule-mismatch
+# ---------------------------------------------------------------------------
+
+
+def _seq_rendezvous(seq, mesh_axes) -> set:
+    axes = set()
+    for kind, op_axes in seq:
+        if (kind, op_axes) == MISMATCH:
+            axes |= set(mesh_axes)   # unknown nested schedule: assume worst
+        elif kind == "ppermute":
+            axes |= set(mesh_axes)
+        else:
+            axes |= set(op_axes)
+    return axes
+
+
+def check_branch_schedules(an: Analysis, combo: str) -> List[Finding]:
+    """Cond branches that issue different (kind, axes) collective
+    sequences are fine while the predicate is uniform over every axis
+    those collectives rendezvous on (all devices take the same branch)
+    — and a deadlock/mismatched-rendezvous hazard the moment it can
+    diverge over one of them."""
+    findings = []
+    for rec in an.conds:
+        seqs = set(rec.branch_seqs)
+        if len(seqs) == 1 and MISMATCH not in rec.branch_seqs[0]:
+            continue   # identical schedules: divergence is harmless
+        divergent = set(an.mesh_axes) - rec.pred.unif
+        if not divergent:
+            continue   # uniform predicate: lockstep branch choice
+        rendezvous = set()
+        for seq in rec.branch_seqs:
+            rendezvous |= _seq_rendezvous(seq, an.mesh_axes)
+        hazard = rendezvous & divergent
+        if not hazard:
+            continue   # branches differ but all ops stay local to
+            #            axes the predicate is uniform over
+        findings.append(Finding(
+            rule="R2", combo=combo,
+            message=(
+                f"cond branches issue different collective sequences "
+                f"{[list(s) for s in rec.branch_seqs]!r} under a "
+                f"predicate ({rec.pred.desc}) divergent over "
+                f"{_fmt_axes(hazard)}"),
+            detail={
+                "branch_sequences": [
+                    [[k, list(a)] for k, a in seq]
+                    for seq in rec.branch_seqs],
+                "predicate": rec.pred.desc,
+                "predicate_uniform_over": sorted(rec.pred.unif),
+                "divergent_axes": sorted(hazard),
+                "path": rec.path,
+            }))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3: unknown-axis / pod-leak / under-declared rendezvous contract
+# ---------------------------------------------------------------------------
+
+
+def check_axis_layout(an: Analysis, combo: str, *,
+                      entry_name: str,
+                      graph_axes: Sequence[str],
+                      sync_axes: Sequence[str] = (),
+                      declared_rendezvous: Optional[Sequence[str]] = None
+                      ) -> List[Finding]:
+    """Three layout checks:
+
+    * a collective over an axis outside the entry's declared graph
+      axes (+ the sync/pod axis for scalar reductions) is reaching a
+      mesh dimension the decomposition never declared — in a pod mesh
+      that is graph data leaking across embarrassingly-parallel pods;
+    * data-moving collectives (gather/to-all/permute) must stay on the
+      graph axes entirely: pods replicate the graph, they never
+      exchange it;
+    * the entry's ``rendezvous_axes`` declaration must cover what its
+      program actually issues (an entry that ppermutes but claims
+      strip-local rendezvous would let a future per-slice heuristic
+      slip past review — the declaration is checked, not trusted)."""
+    findings = []
+    graph_axes = set(graph_axes)
+    sync_axes = set(sync_axes)
+    actual_rendezvous = set()
+    for site in an.sites:
+        rv = set(site.rendezvous(an.mesh_axes))
+        if site.kind in ("psum", "pmax", "pmin"):
+            # scalar reductions over the sync/pod axis are the engine's
+            # lockstep machinery (_search_loop), issued for every entry
+            # — they are not part of the entry's declared schedule
+            rv -= sync_axes
+        actual_rendezvous |= rv
+        op_axes = set(site.axes)
+        allowed = graph_axes | (sync_axes if site.kind in
+                                ("psum", "pmax", "pmin") else set())
+        stray = op_axes - allowed
+        if not stray:
+            continue
+        leak = stray & sync_axes
+        findings.append(Finding(
+            rule="R3", combo=combo,
+            message=(
+                f"{site.kind} over {site.axes!r} reaches "
+                f"{'the pod axis ' + _fmt_axes(leak) if leak else 'undeclared axes ' + _fmt_axes(stray)} "
+                f"outside decomposition {entry_name!r}'s layout "
+                f"{_fmt_axes(graph_axes)}"),
+            detail={
+                "collective": site.kind,
+                "op_axes": list(site.axes),
+                "allowed_axes": sorted(allowed),
+                "stray_axes": sorted(stray),
+                "pod_leak": bool(leak),
+                "path": site.path,
+            }))
+    if declared_rendezvous is not None:
+        under = actual_rendezvous - set(declared_rendezvous)
+        if under:
+            findings.append(Finding(
+                rule="R3", combo=combo,
+                message=(
+                    f"decomposition {entry_name!r} declares "
+                    f"rendezvous_axes={_fmt_axes(declared_rendezvous)} but "
+                    f"its program rendezvouses on "
+                    f"{_fmt_axes(actual_rendezvous)} — the declaration "
+                    f"under-claims {_fmt_axes(under)}"),
+                detail={
+                    "declared": sorted(declared_rendezvous),
+                    "actual": sorted(actual_rendezvous),
+                    "under_declared": sorted(under),
+                }))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R4: budget-drift (lowered-HLO counts vs the comm model)
+# ---------------------------------------------------------------------------
+
+
+def check_budget(counts: Dict[str, int], budget: int, *, combo: str,
+                 mode: str) -> List[Finding]:
+    """One lowered level body vs its published collective budget."""
+    total = counts.get("total", 0)
+    if total <= budget:
+        return []
+    return [Finding(
+        rule="R4", combo=combo,
+        message=(
+            f"{mode} level body lowers to {total} collective ops, over "
+            f"the comm_model budget of {budget}"),
+        detail={"mode": mode, "counts": dict(counts), "budget": budget})]

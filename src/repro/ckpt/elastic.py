@@ -8,7 +8,7 @@ that every spec still divides evenly.  Graphs must be structurally
 re-blocked (the paper's data layout is grid-dependent)."""
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import numpy as np

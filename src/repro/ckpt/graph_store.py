@@ -34,7 +34,7 @@ import shutil
 import tempfile
 import time
 from dataclasses import asdict, is_dataclass
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import numpy as np

@@ -8,8 +8,8 @@ too, so the launcher treats it uniformly.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 # --------------------------------------------------------------------------
 # Shape specs

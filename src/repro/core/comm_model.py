@@ -8,6 +8,7 @@ closed forms.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Dict
 
 
 def topdown_words(n: int, m: int, pr: int, pc: int) -> float:
@@ -112,6 +113,24 @@ def level_collective_budget(decomposition: str, mode: str, pc: int = 1,
         return 1     # bottom-up always exchanges the one dense bitmap
     raise ValueError(f"no collective budget modeled for "
                      f"decomposition={decomposition!r} mode={mode!r}")
+
+
+def level_budgets_for(decomposition: str, *, pc: int, p: int,
+                      fold_mode: str = "alltoall",
+                      compact_updates: bool = False,
+                      frontier_codec: str = "none",
+                      expand_chunks: int = 1) -> Dict[str, int]:
+    """Both per-level budgets for one registry-enumerated schedule case
+    (``repro.analysis.registry.budget_cases``): the keyword names match
+    the BFSConfig fields a Decomposition entry lists in its
+    ``schedule_dims``, so the enumeration needs no per-entry adapter.
+    The grid size the budget scales with is the fold/ring extent ``pc``
+    for the 2d checkerboard and the strip count ``p`` for 1d/1ds."""
+    grid = pc if decomposition == "2d" else p
+    return {mode: level_collective_budget(
+        decomposition, mode, grid, fold_mode=fold_mode,
+        compact_updates=compact_updates, codec=frontier_codec,
+        expand_chunks=expand_chunks) for mode in ("td", "bu")}
 
 
 # ---------------------------------------------------------------------------

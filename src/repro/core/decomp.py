@@ -95,6 +95,38 @@ class Decomposition:
     body: Callable            # (g, root, *, part, args, cfg, sync_axis)
     validate: Callable        # (part, statics) -> None (raises on bad plan)
 
+    # ---- SPMD collective contract (checked by repro.analysis) -------------
+    #
+    # ``rendezvous_axes(axes, mesh_axes)`` declares the mesh axes this
+    # entry's level schedule rendezvouses on: the axes every cond/while
+    # predicate guarding one of its collectives must be provably uniform
+    # over before divergent slices are safe.  Strip entries (1d/1ds) are
+    # group-local — their all_gathers/all_to_alls lower with
+    # replica_groups along the strip axis, so per-pod-divergent td/bu
+    # decisions are safe and they declare just ``axes``.  The 2d entry
+    # ppermutes (transpose / ring fold / systolic rotation), and XLA
+    # lowers collective-permute as a single whole-program rendezvous
+    # regardless of source_target_pairs — so it declares the WHOLE mesh
+    # (pod axis included): a pod taking the other branch would wait on a
+    # permute its peers never issue (the PR 4 deadlock class).  The
+    # default (None) is the conservative whole-mesh claim.  The linter
+    # does not *trust* this: it recomputes per-op rendezvous from the
+    # jaxpr (rule R1) and flags entries whose declaration under-claims
+    # what their program actually issues (rule R3).
+    rendezvous_axes: Optional[Callable] = None
+    # ``schedule_dims`` lists the BFSConfig fields that change this
+    # entry's per-level collective schedule; the analyzer's R4 rule (and
+    # tests/test_perf_guard.py through it) enumerates their cross
+    # product against ``comm_model.level_collective_budget`` instead of
+    # keeping a hand-written case table — a new entry registers its dims
+    # and is budget-checked automatically.
+    schedule_dims: Tuple[str, ...] = ("expand_chunks",)
+    # ``level_steps`` = (topdown, bottomup) per-level step functions
+    # (signature ``step(g, pi, front, args, lv)``), the same closures
+    # ``body`` drives through _search_loop — exposed so the analyzer can
+    # lower ONE level body in isolation for the R4 budget check.
+    level_steps: Optional[Tuple[Callable, Callable]] = None
+
     # ---- PartitionSpec layout (shared by single-root + batch programs) ----
 
     def graph_spec(self, axes: Tuple[str, ...]) -> P:
@@ -133,6 +165,15 @@ def get_decomposition(name: str) -> Decomposition:
 
 def registered_decompositions() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def unregister_decomposition(name: str) -> None:
+    """Remove an entry — for scoped test/fixture registrations only
+    (repro.analysis.fixtures registers a deliberately-broken entry,
+    lints it, and must leave the registry exactly as it found it)."""
+    if name not in _REGISTRY:
+        raise ValueError(f"no decomposition registered for {name!r}")
+    del _REGISTRY[name]
 
 
 # ---------------------------------------------------------------------------
@@ -373,7 +414,12 @@ register_decomposition(Decomposition(
     name="2d", partition_cls=Partition2D, graph_cls=BlockedGraph,
     n_axes=2, axis_sizes=lambda part: (part.pr, part.pc),
     make_level_args=_make_args_2d, body=_bfs_body_2d,
-    validate=_validate_2d))
+    validate=_validate_2d,
+    # ppermutes rendezvous with EVERY device (whole-mesh XLA
+    # collective-permute) — hence sync_modes=True above
+    rendezvous_axes=lambda axes, mesh_axes: tuple(mesh_axes),
+    schedule_dims=("fold_mode", "compact_updates", "expand_chunks"),
+    level_steps=(topdown_level, bottomup_level)))
 
 
 # ---------------------------------------------------------------------------
@@ -446,7 +492,12 @@ register_decomposition(Decomposition(
     name="1d", partition_cls=Partition1D, graph_cls=Blocked1DGraph,
     n_axes=1, axis_sizes=lambda part: (part.p,),
     make_level_args=_make_args_1d, body=_bfs_body_1d,
-    validate=_validate_1d))
+    validate=_validate_1d,
+    # group-local along the strip axis: per-slice direction switching
+    # is safe, so pods never enter the rendezvous
+    rendezvous_axes=lambda axes, mesh_axes: tuple(axes),
+    schedule_dims=("expand_chunks",),
+    level_steps=(topdown_level_1d, bottomup_level_1d)))
 
 
 # ---------------------------------------------------------------------------
@@ -493,4 +544,7 @@ register_decomposition(Decomposition(
     name="1ds", partition_cls=Partition1D, graph_cls=Blocked1DGraph,
     n_axes=1, axis_sizes=lambda part: (part.p,),
     make_level_args=_make_args_1ds, body=_bfs_body_1ds,
-    validate=_validate_1ds))
+    validate=_validate_1ds,
+    rendezvous_axes=lambda axes, mesh_axes: tuple(axes),
+    schedule_dims=("frontier_codec", "expand_chunks"),
+    level_steps=(topdown_level_1ds, bottomup_level_1ds)))

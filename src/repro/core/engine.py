@@ -170,6 +170,23 @@ class BFSPlan:
             check_vma=False)
         return jax.jit(mapped)
 
+    # ---- static analysis --------------------------------------------------
+
+    def lint(self, pod_axis: Optional[str] = None) -> List[Any]:
+        """Run the SPMD collective-schedule linter (repro.analysis,
+        rules R1–R3) on this plan's traced program and return the
+        findings (empty = clean).  When ``pod_axis`` names an axis of
+        the plan's mesh the pod-batched program is linted — that is
+        where divergence hazards live (per-pod direction decisions
+        around whole-mesh collectives); otherwise the single-root
+        program.  Traces only; nothing is lowered, compiled, or run.
+        Registry-wide sweeps (including the R4 budget check) live in
+        ``python -m repro.analysis.lint``."""
+        from repro.analysis.registry import lint_plan
+        if pod_axis is None and "pod" in self.mesh.shape:
+            pod_axis = "pod"
+        return lint_plan(self, pod_axis=pod_axis)
+
     # ---- session ----------------------------------------------------------
 
     def compile(self, store=None, exec_key: str = "default") -> "BFSEngine":
@@ -275,9 +292,13 @@ def plan_bfs(graph, cfg: BFSConfig, mesh, *,
 
 # one collective instruction, in compiled HLO (`%x = <shape> op(...)`,
 # async collectives as op-start/op-done pairs — count the starts) or in
-# lowered StableHLO (`stablehlo.op"?(`)
+# lowered StableHLO (`stablehlo.op"?(`).  The HLO arm must not cross a
+# quote while scanning from `=` to the op name: instruction lines carry
+# metadata={op_name="..."} strings that can embed collective names
+# followed by `(`, and matching inside them double-counts the op the
+# string merely describes (tests/test_hlo_counts.py pins this).
 _COLLECTIVE_OP_RE = re.compile(
-    r"(?:=\s*[^=\n]*?\b(all-reduce|all-gather|all-to-all|reduce-scatter|"
+    r"(?:=\s*[^=\n\"]*?\b(all-reduce|all-gather|all-to-all|reduce-scatter|"
     r"collective-permute)(?:-start)?\()"
     r"|(?:stablehlo\.(all_reduce|all_gather|all_to_all|reduce_scatter|"
     r"collective_permute)\b)")

@@ -97,6 +97,16 @@ def registered_combos() -> Tuple[Tuple[str, str, str], ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def unregister_local_ops(decomposition: str, local_mode: str,
+                         storage: str) -> None:
+    """Remove an entry — for scoped test/fixture registrations only
+    (mirrors decomp.unregister_decomposition)."""
+    key = (decomposition, local_mode, storage)
+    if key not in _REGISTRY:
+        raise ValueError(f"no LocalOps registered for {key}")
+    del _REGISTRY[key]
+
+
 # ---------------------------------------------------------------------------
 # Top-down SpMSV closures
 # ---------------------------------------------------------------------------

@@ -37,7 +37,6 @@ def _spmm_body(g: Dict[str, jax.Array], x: jax.Array, *, part: Partition2D,
     pr, pc, chunk, nc, nr = part.pr, part.pc, part.chunk, part.nc, part.nr
     g = {k: v[0, 0] for k, v in g.items()}
     x = x[0, 0]                                   # (chunk, d) layout A
-    d = x.shape[-1]
     # expand: A -> B layout, then allgather C_j slice along the column
     xb = lax.ppermute(x, (row_axis, col_axis), perm)
     x_cj = lax.all_gather(xb, row_axis, tiled=True)        # (nc, d)

@@ -16,7 +16,6 @@ Counters (dict of f32 scalars, *global* paper-units: 1 id = 1 word,
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Tuple
 
 import jax
@@ -25,7 +24,7 @@ from jax import lax
 
 from repro.core import comm_model
 from repro.core.frontier import (INT_INF, expand_bitmap, pack_bits,
-                                 test_bits, transpose_vector, unpack_bits)
+                                 unpack_bits)
 
 COUNTER_KEYS = ("wire_transpose", "wire_expand", "wire_fold", "wire_rotate",
                 "wire_updates", "use_expand", "use_fold", "use_rotate",

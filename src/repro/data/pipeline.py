@@ -10,7 +10,7 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator
 
 import jax
 import numpy as np

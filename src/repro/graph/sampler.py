@@ -12,7 +12,7 @@ GNN aggregates bottom-up.  Zero-degree vertices self-sample (self-loop).
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,10 @@ import jax
 from repro.kernels.bottomup.bottomup import bottomup_substep_kernel
 from repro.kernels.bottomup.ref import bottomup_substep as substep_ref
 
+# the jnp reference rides along as part of the public surface so
+# callers can A/B the kernel against its ref without a second import
+__all__ = ["bottomup_substep", "substep_ref"]
+
 
 @functools.partial(jax.jit, static_argnames=("rt", "et", "interpret"))
 def bottomup_substep(rp_seg, ue_win, f_words, cvec, col_offset, n_edges,

@@ -11,6 +11,11 @@ from repro.kernels.frontier_codec.ref import (
     decode_buckets as decode_buckets_ref,
     encode_offsets as encode_offsets_ref)
 
+# the jnp references ride along as part of the public surface so
+# callers can A/B a kernel against its ref without a second import
+__all__ = ["encode_offsets", "decode_buckets",
+           "encode_offsets_ref", "decode_buckets_ref"]
+
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def encode_offsets(off, count, chunk: int, interpret: bool = True):

@@ -10,7 +10,6 @@ non-empty global columns against the allgathered frontier bitmap
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.frontier import INT_INF

@@ -14,7 +14,6 @@ Cell kinds:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -11,11 +11,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import GNNShape, get_config
+from repro.configs.base import get_config
 from repro.core.compat import shard_map
 from repro.core.partition import make_partition
 from repro.launch.cells import Cell, _ns, _round_up, _sds

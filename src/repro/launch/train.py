@@ -37,7 +37,6 @@ def main(argv=None):
     ctx = ShardCtx(mesh=None)
 
     if cfg.kind == "bfs":
-        from repro.configs.base import BFSConfig
         from repro.core.bfs import run_bfs
         from repro.core.ref import validate_parents
         from repro.graph.formats import build_blocked

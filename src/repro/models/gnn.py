@@ -13,15 +13,13 @@ node 0 (their contributions are multiplied away).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.configs.base import GNNConfig
-from repro.models.common import ShardCtx
 
 
 def seg_sum(x, ids, n):
@@ -100,7 +98,6 @@ def init_gat(cfg: GNNConfig, key, d_in: int, n_out: int):
 
 
 def gat_forward(p, cfg: GNNConfig, x, senders, receivers, edge_mask, n: int):
-    H = cfg.n_heads
     for l in range(cfg.n_layers):
         last = l == cfg.n_layers - 1
         z = jnp.einsum("nd,dhk->nhk", x, p[f"W{l}"])

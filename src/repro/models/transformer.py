@@ -17,9 +17,7 @@ Layers are stacked (leading L dim) and scanned; remat is configurable.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -433,7 +431,6 @@ def decode_step(params, cache, token, pos, cfg: LMConfig, ctx: ShardCtx,
                 kv_chunk: int = 2048):
     """One decode step: token (B, 1), pos scalar int32 (current length).
     Returns (cache, logits (B, V))."""
-    B = token.shape[0]
     h = params["embed"][token].astype(jnp.dtype(cfg.dtype))
     layers = _stack_layers(params)
 

@@ -13,16 +13,14 @@ in EXPERIMENTS reflects ids+values, and the *math* (what update gets
 applied) is identical, which is what the convergence test checks."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
-from repro.optim.grad_compress import (EFState, ef_init, int8_dequantize,
+from repro.optim.grad_compress import (ef_init, int8_dequantize,
                                        int8_quantize, topk_compress,
                                        topk_decompress)
 

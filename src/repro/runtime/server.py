@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

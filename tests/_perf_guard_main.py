@@ -1,9 +1,11 @@
 """Subprocess entry for the HLO collective-count perf guard.
 
-Lowers (never compiles or runs) each decomposition's per-level step
-bodies and whole-search programs on 8 forced host devices, with
-``instrument`` on and off, and prints the collective-op counts as JSON
-for tests/test_perf_guard.py to assert budgets against.
+Since the PR 9 linter, the case table and the lowering helpers live in
+``repro.analysis.registry`` (the R4 budget-drift rule) — this entry
+just forces the host devices, runs ``collect_counts()`` over the
+registry-enumerated schedule cases (lowering only, never compiling or
+running), and prints the counts as JSON for tests/test_perf_guard.py
+to assert budgets against.
 
 Run as:  python tests/_perf_guard_main.py
 """
@@ -14,114 +16,11 @@ import sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np  # noqa: E402
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
-
-from repro.configs.base import BFSConfig  # noqa: E402
-from repro.core import steps, steps_1d, steps_1d_sparse  # noqa: E402
-from repro.core.compat import shard_map  # noqa: E402
-from repro.core.engine import hlo_collective_counts, plan_bfs  # noqa: E402
-from repro.graph.formats import build_blocked, build_blocked_1d  # noqa: E402
-from repro.graph.rmat import rmat_graph  # noqa: E402
-from repro.launch.mesh import make_local_mesh, make_local_mesh_1d  # noqa: E402
-
-_STEPS = {
-    "2d": (steps.topdown_level, steps.bottomup_level),
-    "1d": (steps_1d.topdown_level_1d, steps_1d.bottomup_level_1d),
-    "1ds": (steps_1d_sparse.topdown_level_1ds,
-            steps_1d_sparse.bottomup_level_1ds),
-}
-
-
-def _sds(a):
-    a = np.asarray(a)
-    return jax.ShapeDtypeStruct(a.shape, a.dtype)
-
-
-def search_counts(graph, cfg, mesh, plan):
-    """Collective counts of the lowered whole-search program."""
-    arrs = {k: _sds(v) for k, v in graph.device_arrays().items()
-            if k in plan.keys}
-    txt = plan.build_fn().lower(arrs, jnp.int32(0)).as_text()
-    return hlo_collective_counts(txt)
-
-
-def level_counts(graph, cfg, mesh, plan, which):
-    """Collective counts of ONE lowered level step body (td or bu) —
-    the per-level schedule minus the loop's fused reduction.  The
-    fast-path ``lv`` context is threaded as a replicated input; the
-    instrumented step gets lv=None, exactly as _search_loop calls it."""
-    args = plan.level_args()
-    nax = plan.entry.n_axes
-    td, bu = _STEPS[cfg.decomposition]
-    step = td if which == "td" else bu
-    sq = (0,) * nax
-
-    ctr_keys = steps.COUNTER_KEYS if args.instrument else ()
-
-    def fn(garr, pi, front, over):
-        gl = {k: v[sq] for k, v in garr.items()}
-        lv = None if args.instrument else {"over": over}
-        pi2, f2, ctr = step(gl, pi[sq], front[sq], args, lv)
-        # ctr must stay a live output or the counter psums get DCE'd —
-        # the whole point is counting what the instrumented level pays
-        return pi2.reshape((1,) * nax + pi2.shape), dict(ctr)
-
-    spec = P(*plan.axes)
-    gspec = {k: spec for k in plan.keys}
-    mapped = shard_map(fn, mesh=mesh,
-                      in_specs=(gspec, spec, spec, P()),
-                      out_specs=(spec, {k: P() for k in ctr_keys}),
-                      check_vma=False)
-    arrs = {k: _sds(v) for k, v in graph.device_arrays().items()
-            if k in plan.keys}
-    part = plan.part
-    pi = jax.ShapeDtypeStruct(arrs["deg_A"].shape, np.int32)
-    fr = jax.ShapeDtypeStruct(arrs["deg_A"].shape, np.bool_)
-    txt = jax.jit(mapped).lower(arrs, pi, fr,
-                                jnp.zeros((), bool)).as_text()
-    return hlo_collective_counts(txt)
+from repro.analysis.registry import collect_counts  # noqa: E402
 
 
 def main():
-    e = rmat_graph(9, edge_factor=8, seed=3)
-    g2 = build_blocked(e, 2, 4, align=32, cap_pad=32)
-    g1 = build_blocked_1d(e, 8, align=32, cap_pad=32)
-    out = {"pc": 4, "p": 8}
-    cases = [
-        ("2d_alltoall", "2d", dict(fold_mode="alltoall")),
-        ("2d_reduce", "2d", dict(fold_mode="reduce")),
-        ("2d_bitmap", "2d", dict(fold_mode="bitmap")),
-        ("2d_compact", "2d", dict(fold_mode="alltoall",
-                                  compact_updates=True)),
-        ("1d", "1d", {}),
-        ("1ds", "1ds", {}),                      # packed codec (default)
-        ("1ds_raw", "1ds", dict(frontier_codec="none")),
-        # software-pipelined expand: chunk the 1d/1ds top-down gather,
-        # pipeline the 2d bottom-up ring (R/G split).  The scale-9 p=8
-        # strips pack to 2 words, so 2 is the only chunking this graph
-        # admits — enough to pin the C-proportional budgets.
-        ("1d_c2", "1d", dict(expand_chunks=2)),
-        ("1ds_c2", "1ds", dict(expand_chunks=2)),
-        ("2d_pipe", "2d", dict(fold_mode="alltoall", expand_chunks=2)),
-    ]
-    for name, decomp, kw in cases:
-        g = g2 if decomp == "2d" else g1
-        mesh = make_local_mesh(2, 4) if decomp == "2d" \
-            else make_local_mesh_1d(8)
-        row = {}
-        for label, instr in (("fast", False), ("instrumented", True)):
-            cfg = BFSConfig(decomposition=decomp, instrument=instr, **kw)
-            plan = plan_bfs(g, cfg, mesh)
-            row[label] = {
-                "search": search_counts(g, cfg, mesh, plan),
-                "td": level_counts(g, cfg, mesh, plan, "td"),
-                "bu": level_counts(g, cfg, mesh, plan, "bu"),
-            }
-        out[name] = row
-    print(json.dumps(out))
+    print(json.dumps(collect_counts()))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+"""System tests for the collective-schedule linter (the PR 9
+tentpole): the deliberately-broken pre-PR-4 fixture is flagged by rule
+R1 with the offending collective and the non-uniform predicate named;
+every shipped registry combo lints clean; the registry stays pristine
+around the fixture; ``BFSPlan.lint()`` is the in-process entry point.
+
+The registry sweep and the fixture's pod-batched program need 16
+forced host devices, so those run the CLI in a subprocess (exactly how
+CI's lint lane runs it); the in-process tests stick to 1x1 meshes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ENV = dict(os.environ)
+_ENV.pop("XLA_FLAGS", None)
+_ENV["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                      + os.pathsep + _ENV.get("PYTHONPATH", ""))
+
+
+def _run_cli(*args, timeout=900):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, timeout=timeout, env=_ENV)
+
+
+# ---------------------------------------------------------------------------
+# in-process: registry hygiene + the podless mesh counterpoint
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_registration_is_scoped():
+    """The broken entry (and its LocalOps mirror) exists only inside
+    the with-block; the registry pin in test_engine stays true."""
+    from repro.analysis.fixtures import FIXTURE_NAME, divergent_2d_fixture
+    from repro.core import decomp, local_ops
+    assert decomp.registered_decompositions() == ("1d", "1ds", "2d")
+    with divergent_2d_fixture() as entry:
+        assert FIXTURE_NAME in decomp.registered_decompositions()
+        assert entry.name == FIXTURE_NAME
+        assert decomp.get_decomposition(FIXTURE_NAME) is entry
+        assert any(d == FIXTURE_NAME
+                   for d, _, _ in local_ops.registered_combos())
+    assert decomp.registered_decompositions() == ("1d", "1ds", "2d")
+    assert not any(d == FIXTURE_NAME
+                   for d, _, _ in local_ops.registered_combos())
+
+
+def test_fixture_clean_without_pod_axis():
+    """R1 keys on the MESH, not the code: the same broken body is
+    harmless on a podless mesh (its per-slice psum is uniform over the
+    whole mesh there), and must lint clean — the hazard only exists
+    once a pod axis can diverge."""
+    from repro.analysis.fixtures import FIXTURE_NAME, divergent_2d_fixture
+    from repro.configs.base import BFSConfig
+    from repro.core.engine import plan_bfs
+    from repro.graph.formats import build_blocked
+    from repro.graph.rmat import rmat_graph
+    from repro.launch.mesh import make_local_mesh
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    with divergent_2d_fixture():
+        plan = plan_bfs(g, BFSConfig(decomposition=FIXTURE_NAME),
+                        make_local_mesh(1, 1))
+        findings = plan.lint()
+    assert findings == [], [f.message for f in findings]
+
+
+def test_plan_lint_returns_structured_findings():
+    """BFSPlan.lint() is the in-process hook: list of Finding with
+    JSON-ready details (shipped plans return the empty list — asserted
+    across entries in test_uniformity)."""
+    from repro.configs.base import BFSConfig
+    from repro.core.engine import plan_bfs, plan_for_part
+    from repro.core.partition import make_partition
+    from repro.graph.formats import build_blocked
+    from repro.graph.rmat import rmat_graph
+    from repro.launch.mesh import make_local_mesh
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    plan = plan_bfs(g, BFSConfig(decomposition="2d"), make_local_mesh(1, 1))
+    assert plan.lint() == []
+    # graphless plans cannot trace -> explicit error, not a crash
+    bare = plan_for_part(make_partition(e.n, 1, 1, align=32),
+                         BFSConfig(decomposition="2d"),
+                         make_local_mesh(1, 1), cap_seg=32)
+    with pytest.raises(ValueError, match="graph"):
+        bare.lint()
+
+
+# ---------------------------------------------------------------------------
+# subprocess: the CLI as CI runs it
+# ---------------------------------------------------------------------------
+
+
+def test_cli_quick_flags_fixture_and_clean_registry(tmp_path):
+    """--quick --expect-fixture: every representative shipped combo is
+    clean, and R1 flags the fixture naming the whole-mesh ppermute, the
+    per-slice predicate, and the pod axis it can diverge over."""
+    report_path = tmp_path / "lint-report.json"
+    r = _run_cli("--quick", "--no-budgets", "--expect-fixture",
+                 "--json", str(report_path))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    report = json.loads(report_path.read_text())
+    assert report["clean"] and report["findings"] == []
+    assert len(report["combos"]) >= 3        # one per shipped entry
+    fix = report["fixture"]["findings"]
+    r1 = [f for f in fix if f["rule"] == "R1"
+          and f["detail"]["collective"] == "ppermute"]
+    assert r1, fix
+    d = r1[0]["detail"]
+    assert d["divergent_axes"] == ["pod"]
+    assert "pod" in d["rendezvous_axes"]
+    assert "psum" in d["predicate"]          # the per-slice decision
+    assert d["predicate_uniform_over"] == ["data", "model"]
+    assert "ppermute" in r1[0]["message"] and "deadlock" in r1[0]["message"]
+
+
+@pytest.mark.slow
+def test_cli_full_registry_clean(tmp_path):
+    """The full sweep (every LocalOps x schedule combo + all 18 budget
+    cases + the fixture self-check) exits 0 — the CI lint lane."""
+    report_path = tmp_path / "lint-report.json"
+    r = _run_cli("--expect-fixture", "--json", str(report_path))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    report = json.loads(report_path.read_text())
+    assert report["clean"]
+    assert len(report["combos"]) >= 50       # the real sweep, not quick
+    assert len(report["budget_cases"]) >= 18

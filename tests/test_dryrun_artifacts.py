@@ -1,7 +1,6 @@
 """Deliverable (e)/(g) artifact checks: the multi-pod dry-run results
 must exist for every (arch x shape x mesh) cell with roofline terms.
 (Regenerate with: PYTHONPATH=src python -m repro.launch.dryrun)"""
-import glob
 import json
 import os
 

@@ -23,7 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import comm_model
 from repro.core.compat import shard_map
-from repro.core.frontier import pack_bits, pack_ids, unpack_bits, unpack_ids
+from repro.core.frontier import pack_ids, unpack_bits, unpack_ids
 from repro.core.steps_1d_sparse import sparse_exchange_1d
 from repro.graph.formats import build_blocked_1d
 from repro.graph.rmat import rmat_graph

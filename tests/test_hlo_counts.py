@@ -1,0 +1,81 @@
+"""Unit tests for ``engine.hlo_collective_counts`` against committed
+dump fixtures — the counter every perf budget (test_perf_guard, lint
+rule R4, the bench trajectory) stands on.
+
+Three fixtures under tests/fixtures/hlo/ (see regen.py there):
+
+  * probe.stablehlo.txt — lowered StableHLO: the underscore
+    ``"stablehlo.all_reduce"(...)`` spellings;
+  * probe.compiled.txt — compiled CPU HLO: hyphenated
+    ``all-reduce(...)`` spellings, tuple-shaped all-to-all, operand
+    references like ``%all-to-all.2)`` that must not count;
+  * tpu_async.hlo.txt — hand-written TPU-style dump: async
+    ``-start``/``-done`` pairs (one op each, not two, and never the
+    intermediate ``-done``), ``reduce-scatter``, and collective names
+    embedded in ``metadata={op_name="..."}`` strings, which the quote
+    guard in ``_COLLECTIVE_OP_RE`` must NOT count (an earlier regex
+    scanned across the quoted op_name and over-counted fusions whose
+    provenance mentioned a collective).
+"""
+import os
+import re
+
+from repro.core.engine import hlo_collective_counts
+
+_FIX = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+
+
+def _read(name):
+    with open(os.path.join(_FIX, name)) as fh:
+        return fh.read()
+
+
+def test_stablehlo_spellings():
+    counts = hlo_collective_counts(_read("probe.stablehlo.txt"))
+    assert counts == {"all-reduce": 1, "all-gather": 1, "all-to-all": 1,
+                      "collective-permute": 1, "total": 4}
+
+
+def test_compiled_hlo_spellings():
+    """Compiled CPU HLO: one op each; the tuple-shaped all-to-all
+    result and later get-tuple-element operand references must not
+    inflate the count."""
+    text = _read("probe.compiled.txt")
+    counts = hlo_collective_counts(text)
+    assert counts == {"all-reduce": 1, "all-gather": 1, "all-to-all": 1,
+                      "collective-permute": 1, "total": 4}
+
+
+def test_tpu_async_pairs_count_once():
+    """``all-reduce-start``/``-done`` is ONE collective; the fixture
+    issues ar/ag/cp as async pairs plus a sync reduce-scatter."""
+    counts = hlo_collective_counts(_read("tpu_async.hlo.txt"))
+    assert counts == {"all-reduce": 1, "all-gather": 1,
+                      "collective-permute": 1, "reduce-scatter": 1,
+                      "total": 4}
+
+
+def test_metadata_op_names_do_not_count():
+    """The fixture's fusion/copy lines carry
+    ``metadata={op_name=".../all-gather(fold)"}`` — provenance strings,
+    not ops.  The quote guard keeps the match from scanning into them;
+    scrubbing every metadata clause from the dump must not change the
+    counts (if it does, metadata strings were being counted)."""
+    text = _read("tpu_async.hlo.txt")
+    scrubbed = re.sub(r", metadata=\{[^}]*\}", "", text)
+    assert "all-gather(fold)" in text and "all-gather(fold)" not in scrubbed
+    assert hlo_collective_counts(text) == hlo_collective_counts(scrubbed)
+
+
+def test_quote_guard_regression():
+    """Minimal reproduction of the miscount the quote guard fixed: a
+    fusion whose op_name embeds ``all-gather(``.  The pre-fix regex
+    (scan ``[^=\\n]*?`` from ``=`` to the op name) crossed the quote
+    and counted it."""
+    line = ('  %fusion.9 = f32[8]{0} fusion(f32[8]{0} %p.0), kind=kLoop, '
+            'calls=%fc, metadata={op_name="while/body/all-gather(fold)"}\n')
+    assert hlo_collective_counts(line) == {"total": 0}
+    buggy = re.compile(
+        r"=\s*[^=\n]*?\b(all-reduce|all-gather|all-to-all|reduce-scatter|"
+        r"collective-permute)(?:-start)?\(")
+    assert buggy.search(line), "hazard line no longer reproduces the bug"

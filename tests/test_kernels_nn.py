@@ -1,5 +1,4 @@
 """Kernel-vs-oracle sweeps: embedding_bag (TBE) and flash attention."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,15 +5,22 @@ says thin-frontier BFS levels are bound by the collective COUNT, not
 volume — so the compiled schedule is a perf artifact in its own right.
 This test lowers each decomposition's level bodies and whole-search
 programs (subprocess, 8 forced host devices, lowering only — no XLA
-compile) with ``instrument`` on and off and pins:
+compile) with ``instrument`` on and off.
 
-  * the instrument-off per-level budgets from
-    ``comm_model.level_collective_budget`` (e.g. 2D top-down <= 4,
-    2D bottom-up <= pc + 3), so future PRs cannot silently re-bloat
-    the fast path;
+Since the PR 9 linter, the case table and budgets have ONE source of
+truth: ``repro.analysis.registry.budget_cases()`` — the cross product
+of every registered entry's ``schedule_dims`` (the R4 budget-drift
+rule).  Registering a new decomposition (or adding a schedule dim) is
+what adds its coverage here; no case list to update.  On top of the
+enumerated budgets this file keeps the previously pinned values as
+explicit regression assertions:
+
+  * the ISSUE headline numbers (2D top-down <= 4 with the alltoall
+    fold, 2D bottom-up <= pc + 3), so future PRs cannot silently
+    re-bloat the fast path;
   * "one fused scalar reduction per level": the fast whole-search
     program carries exactly 2 all-reduces (startup + loop body; the
-    compact-updates overflow pmax adds 1);
+    compact-updates / bitmap-fold overflow pmax adds 1);
   * the acceptance ratio: fast-path collectives <= half the
     instrumented count per 2D top-down level.
 """
@@ -24,10 +31,24 @@ import sys
 
 import pytest
 
-from repro.core import comm_model
+from repro.analysis.registry import budget_cases, case_name
 
 _HERE = os.path.dirname(__file__)
 _MAIN = os.path.join(_HERE, "_perf_guard_main.py")
+
+# legacy spellings -> canonical registry case names, so the pinned
+# regression assertions below read like the schedules they pin
+_2D_ALLTOALL = case_name("2d", {"fold_mode": "alltoall"})
+_2D_REDUCE = case_name("2d", {"fold_mode": "reduce"})
+_2D_BITMAP = case_name("2d", {"fold_mode": "bitmap"})
+_2D_COMPACT = case_name("2d", {"compact_updates": True})
+_2D_PIPE = case_name("2d", {"expand_chunks": 2})
+_1D = case_name("1d", {})
+_1D_C2 = case_name("1d", {"expand_chunks": 2})
+_1DS_PACKED = case_name("1ds", {"frontier_codec": "packed"})
+_1DS_RAW = case_name("1ds", {"frontier_codec": "none"})
+_1DS_C2 = case_name("1ds", {"frontier_codec": "packed",
+                            "expand_chunks": 2})
 
 
 @pytest.fixture(scope="module")
@@ -40,61 +61,42 @@ def counts():
     return json.loads(r.stdout.splitlines()[-1])
 
 
+def test_enumeration_covers_every_registered_case(counts):
+    """The subprocess lowered exactly the registry enumeration — a new
+    entry or schedule dim shows up here without touching this file."""
+    expected = {c.name for c in budget_cases()}
+    got = set(counts) - {"pc", "p"}
+    assert got == expected, (sorted(got ^ expected))
+    assert len(expected) >= 18
+
+
 def test_fast_level_budgets(counts):
-    """Instrument-off level bodies stay within the published budgets."""
+    """Instrument-off level bodies stay within the published budgets
+    for EVERY enumerated schedule case (rule R4's exact check)."""
     pc, p = counts["pc"], counts["p"]
-    budget = comm_model.level_collective_budget
-    cases = {
-        "2d_alltoall": (budget("2d", "td", pc, "alltoall"),
-                        budget("2d", "bu", pc)),
-        "2d_reduce": (budget("2d", "td", pc, "reduce"),
-                      budget("2d", "bu", pc)),
-        "2d_bitmap": (budget("2d", "td", pc, "bitmap"),
-                      budget("2d", "bu", pc)),
-        "2d_compact": (budget("2d", "td", pc, "alltoall"),
-                       budget("2d", "bu", pc, compact_updates=True)),
-        "1d": (budget("1d", "td", p), budget("1d", "bu", p)),
-        # the packed codec must not change the op count — the count word
-        # rides inside the same allgathered bucket buffer, so the packed
-        # ("1ds", the default) and raw ("1ds_raw") exchanges share one
-        # explicit budget
-        "1ds": (budget("1ds", "td", p, codec="packed"),
-                budget("1ds", "bu", p, codec="packed")),
-        "1ds_raw": (budget("1ds", "td", p, codec="none"),
-                    budget("1ds", "bu", p, codec="none")),
-        # pipelined expand: 1d td budget C, 1ds td 2C (C execute), 2d
-        # bottom-up ring 2(pc-1) ppermutes (R/G split); bottom-up in the
-        # strip decompositions keeps its single dense allgather
-        "1d_c2": (budget("1d", "td", p, expand_chunks=2),
-                  budget("1d", "bu", p, expand_chunks=2)),
-        "1ds_c2": (budget("1ds", "td", p, codec="packed", expand_chunks=2),
-                   budget("1ds", "bu", p, codec="packed", expand_chunks=2)),
-        "2d_pipe": (budget("2d", "td", pc, "alltoall"),
-                    budget("2d", "bu", pc, expand_chunks=2)),
-    }
-    for name, (td_budget, bu_budget) in cases.items():
-        fast = counts[name]["fast"]
-        assert fast["td"]["total"] <= td_budget, (
-            name, "td", fast["td"], td_budget)
-        assert fast["bu"]["total"] <= bu_budget, (
-            name, "bu", fast["bu"], bu_budget)
+    for case in budget_cases():
+        b = case.budgets(pc, p)
+        fast = counts[case.name]["fast"]
+        for mode in ("td", "bu"):
+            assert fast[mode]["total"] <= b[mode], (
+                case.name, mode, fast[mode], b[mode])
     # the ISSUE-pinned headline numbers: 2D top-down <= 4 with the
     # paper-faithful alltoall fold, bottom-up <= pc + 3
-    assert counts["2d_alltoall"]["fast"]["td"]["total"] <= 4
-    assert counts["2d_alltoall"]["fast"]["bu"]["total"] <= pc + 3
+    assert counts[_2D_ALLTOALL]["fast"]["td"]["total"] <= 4
+    assert counts[_2D_ALLTOALL]["fast"]["bu"]["total"] <= pc + 3
 
 
 def test_fast_search_single_fused_reduction(counts):
     """The fast whole-search program spends exactly one fused vector
     psum per level: 2 all-reduce ops in the program text (startup +
     while body), +1 for the compact-updates overflow pmax."""
-    for name in ("2d_alltoall", "2d_reduce", "1d", "1ds", "1ds_raw",
-                 "1d_c2", "1ds_c2", "2d_pipe"):
+    for name in (_2D_ALLTOALL, _2D_REDUCE, _1D, _1DS_PACKED, _1DS_RAW,
+                 _1D_C2, _1DS_C2, _2D_PIPE):
         ar = counts[name]["fast"]["search"].get("all-reduce", 0)
         assert ar <= 2, (name, counts[name]["fast"]["search"])
     # the compact-update and bitmap-fold overflow pmaxes add one each
-    assert counts["2d_compact"]["fast"]["search"].get("all-reduce", 0) <= 3
-    assert counts["2d_bitmap"]["fast"]["search"].get("all-reduce", 0) <= 3
+    assert counts[_2D_COMPACT]["fast"]["search"].get("all-reduce", 0) <= 3
+    assert counts[_2D_BITMAP]["fast"]["search"].get("all-reduce", 0) <= 3
 
 
 def test_fast_at_most_half_of_instrumented(counts):
@@ -103,10 +105,10 @@ def test_fast_at_most_half_of_instrumented(counts):
     paper-faithful alltoall fold, and the whole search program shrinks
     at least as much (the ring-reduce fold's pc-1 data ppermutes exist
     in both modes, so its level ratio is asserted strictly-less)."""
-    fast_td = counts["2d_alltoall"]["fast"]["td"]["total"]
-    inst_td = counts["2d_alltoall"]["instrumented"]["td"]["total"]
+    fast_td = counts[_2D_ALLTOALL]["fast"]["td"]["total"]
+    inst_td = counts[_2D_ALLTOALL]["instrumented"]["td"]["total"]
     assert fast_td * 2 <= inst_td, (fast_td, inst_td)
-    for name in ("2d_alltoall", "2d_reduce"):
+    for name in (_2D_ALLTOALL, _2D_REDUCE):
         fast_s = counts[name]["fast"]["search"]["total"]
         inst_s = counts[name]["instrumented"]["search"]["total"]
         assert fast_s * 2 <= inst_s, (name, fast_s, inst_s)
@@ -119,7 +121,7 @@ def test_instrumented_keeps_counter_reductions(counts):
     still pay their counter psums (if this drops to the fast-path
     count, the lowering DCE'd the counters and the budgets above are
     vacuous)."""
-    for name in ("2d_alltoall", "1d", "1ds", "1ds_raw"):
+    for name in (_2D_ALLTOALL, _1D, _1DS_PACKED, _1DS_RAW):
         inst = counts[name]["instrumented"]["td"]
         fast = counts[name]["fast"]["td"]
         assert inst.get("all-reduce", 0) >= 3, (name, inst)
@@ -129,5 +131,5 @@ def test_instrumented_keeps_counter_reductions(counts):
 def test_packed_codec_same_schedule(counts):
     """The codec compresses BYTES, not the schedule: packed and raw
     "1ds" must lower to identical collective counts in every mode."""
-    assert counts["1ds"] == counts["1ds_raw"], (
-        counts["1ds"], counts["1ds_raw"])
+    assert counts[_1DS_PACKED] == counts[_1DS_RAW], (
+        counts[_1DS_PACKED], counts[_1DS_RAW])

@@ -1,6 +1,5 @@
 """Data-pipeline determinism + comm-model closed forms."""
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.core import comm_model

@@ -1,7 +1,6 @@
 """Sequential-oracle tests: Alg. 1 (top-down) vs Alg. 2 (bottom-up)
 produce identical reachability/depths on random graphs (hypothesis)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ref import (bfs_bottomup, bfs_depths, bfs_topdown,

@@ -9,7 +9,7 @@ import pytest
 
 from repro.ckpt import checkpoint as ckpt
 from repro.optim.adamw import AdamW, SGDM, global_norm
-from repro.optim.grad_compress import (EFState, ef_init, int8_dequantize,
+from repro.optim.grad_compress import (ef_init, int8_dequantize,
                                        int8_quantize, topk_compress,
                                        topk_decompress)
 from repro.runtime.straggler import StragglerMonitor

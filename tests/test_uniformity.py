@@ -1,0 +1,287 @@
+"""Unit tests for the mesh-uniformity lattice
+(repro.analysis.uniformity) on synthetic jaxprs, plus the known-clean
+real program: the shipped ``_search_loop`` slice must lint clean.
+
+Synthetic jaxprs are built with ``jax.make_jaxpr(..., axis_env=...)``
+— no mesh, no devices — and walked with explicit input lattice values,
+so these tests pin the transfer functions themselves:
+
+  * psum/all_gather over S makes a value uniform over S (the
+    "uniform-after-psum" fact the engine's lockstep sync rests on);
+  * all_to_all over S destroys uniformity over S; ppermute preserves;
+  * a while carry poisoned by ``axis_index`` stays non-uniform through
+    the fixpoint, poisons the loop predicate, and R1 flags a ppermute
+    under it (the PR 4 deadlock class, reduced to four lines);
+  * nested while-in-cond stacks both predicates on the site, and the
+    outer divergent cond is what R1 names;
+  * branch-schedule divergence is only a finding when the predicate
+    can diverge over axes the differing collectives rendezvous on
+    (R2's hazard intersection).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.analysis.rules import (check_branch_schedules,
+                                  check_divergent_collectives)
+from repro.analysis.uniformity import MISMATCH, AbstractVal, analyze_jaxpr
+
+MESH = ("data", "model", "pod")
+AXIS_ENV = [("data", 2), ("model", 4), ("pod", 2)]
+FULL = frozenset(MESH)
+
+
+def _jaxpr(fn, *args):
+    return jax.make_jaxpr(fn, axis_env=AXIS_ENV)(*args)
+
+
+def _sharded(desc="sharded input"):
+    return AbstractVal(frozenset(), desc)
+
+
+# ---------------------------------------------------------------------------
+# transfer functions
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_after_psum():
+    """A fully-sharded value becomes uniform over exactly the reduced
+    axes — and the site records no enclosing predicate."""
+    cj = _jaxpr(lambda x: lax.psum(x, ("data", "model")), jnp.float32(0))
+    an = analyze_jaxpr(cj, MESH, in_vals=[_sharded()])
+    assert an.out_vals[0].unif == frozenset({"data", "model"})
+    assert "psum" in an.out_vals[0].desc
+    (site,) = an.sites
+    assert site.kind == "psum" and site.preds == ()
+    assert site.rendezvous(MESH) == ("data", "model")
+    assert check_divergent_collectives(an, "t") == []
+
+
+def test_all_gather_adds_all_to_all_removes_ppermute_preserves():
+    cj = _jaxpr(lambda x: lax.all_gather(x, "model"), jnp.zeros((4,)))
+    an = analyze_jaxpr(cj, MESH, in_vals=[_sharded()])
+    assert an.out_vals[0].unif == frozenset({"model"})
+
+    cj = _jaxpr(lambda x: lax.all_to_all(x, "model", 0, 0),
+                jnp.zeros((4, 4)))
+    an = analyze_jaxpr(cj, MESH,
+                       in_vals=[AbstractVal(FULL, "replicated")])
+    assert an.out_vals[0].unif == FULL - {"model"}
+
+    perm = [(i, (i + 1) % 2) for i in range(2)]
+    cj = _jaxpr(lambda x: lax.ppermute(x, "data", perm), jnp.zeros((4,)))
+    an = analyze_jaxpr(cj, MESH,
+                       in_vals=[AbstractVal(frozenset({"pod"}), "r")])
+    assert an.out_vals[0].unif == frozenset({"pod"})
+    # ppermute lowers to a whole-mesh collective-permute regardless of
+    # its named axis — the rendezvous is every mesh axis
+    assert an.sites[-1].rendezvous(MESH) == MESH
+
+
+def test_axis_index_and_constants():
+    cj = _jaxpr(lambda x: x + lax.axis_index("pod"), jnp.int32(0))
+    an = analyze_jaxpr(cj, MESH)  # default: inputs uniform everywhere
+    assert an.out_vals[0].unif == FULL - {"pod"}
+    assert "axis_index" in an.out_vals[0].desc
+    cj = _jaxpr(lambda x: jnp.float32(2.0) * 3.0, jnp.float32(0))
+    an = analyze_jaxpr(cj, MESH, in_vals=[_sharded()])
+    assert an.out_vals[0].unif == FULL  # literals sit at top
+
+
+# ---------------------------------------------------------------------------
+# varying-through-while-carry (the reduced PR 4 deadlock)
+# ---------------------------------------------------------------------------
+
+
+def test_varying_carry_poisons_predicate_and_r1_fires():
+    """axis_index leaks into the while carry; the fixpoint keeps the
+    carry non-uniform over 'pod'; the loop predicate inherits that; the
+    ppermute in the body rendezvouses whole-mesh -> R1."""
+    perm = [(i, (i + 1) % 2) for i in range(2)]
+
+    def f(x):
+        def cond(c):
+            i, v = c
+            return i < v.sum().astype(jnp.int32)
+
+        def body(c):
+            i, v = c
+            v = v + lax.axis_index("pod")       # poison
+            v = lax.ppermute(v, "data", perm)   # whole-mesh rendezvous
+            return i + 1, v
+
+        return lax.while_loop(cond, body, (jnp.int32(0), x))
+
+    an = analyze_jaxpr(_jaxpr(f, jnp.zeros((4,), jnp.int32)), MESH)
+    (site,) = [s for s in an.sites if s.kind == "ppermute"]
+    (pred,) = site.preds
+    assert pred.kind == "while"
+    assert "pod" not in pred.unif
+    findings = check_divergent_collectives(an, "t")
+    assert [f.rule for f in findings] == ["R1"]
+    assert findings[0].detail["collective"] == "ppermute"
+    assert findings[0].detail["divergent_axes"] == ["pod"]
+    assert "axis_index" in findings[0].detail["predicate"]
+    # loop outputs are met with the divergent predicate
+    assert "pod" not in an.out_vals[1].unif
+
+
+def test_uniform_carry_stays_clean():
+    """Same loop shape with a psum-synced predicate: carry and
+    predicate stay uniform, R1 has nothing to say."""
+    perm = [(i, (i + 1) % 2) for i in range(2)]
+
+    def f(x):
+        def cond(c):
+            i, v = c
+            return i < lax.psum(v.sum(), MESH).astype(jnp.int32)
+
+        def body(c):
+            i, v = c
+            return i + 1, lax.ppermute(v, "data", perm)
+
+        return lax.while_loop(cond, body, (jnp.int32(0), x))
+
+    an = analyze_jaxpr(_jaxpr(f, jnp.zeros((4,), jnp.int32)), MESH)
+    (site,) = [s for s in an.sites if s.kind == "ppermute"]
+    assert site.preds[0].unif == FULL
+    assert check_divergent_collectives(an, "t") == []
+
+
+# ---------------------------------------------------------------------------
+# nested while-in-cond
+# ---------------------------------------------------------------------------
+
+
+def test_nested_while_in_cond_stacks_predicates():
+    """A uniform inner while inside a pod-divergent cond: the inner
+    psum site carries BOTH predicates, and R1 blames the outer cond
+    (the inner while predicate is uniform)."""
+
+    def f(x):
+        outer = lax.axis_index("pod") == 0      # divergent over pod
+
+        def true_branch(v):
+            def cond(c):
+                i, _ = c
+                return i < 3
+
+            def body(c):
+                i, u = c
+                return i + 1, lax.psum(u, ("data", "pod"))
+
+            return lax.while_loop(cond, body, (jnp.int32(0), v))[1]
+
+        return lax.cond(outer, true_branch, lambda v: v, x)
+
+    an = analyze_jaxpr(_jaxpr(f, jnp.float32(0)), MESH)
+    (site,) = [s for s in an.sites if s.kind == "psum"]
+    assert [p.kind for p in site.preds] == ["cond", "while"]
+    assert "pod" not in site.preds[0].unif       # the divergent cond
+    assert site.preds[1].unif == FULL            # i < 3 is uniform
+    findings = check_divergent_collectives(an, "t")
+    assert len(findings) == 1
+    assert findings[0].detail["predicate_kind"] == "cond"
+    assert findings[0].detail["divergent_axes"] == ["pod"]
+    # ...and the branch schedules differ under a divergent predicate
+    # over an axis the psum rendezvouses on -> R2 fires too
+    r2 = check_branch_schedules(an, "t")
+    assert len(r2) == 1 and "pod" in r2[0].detail["divergent_axes"]
+
+
+def test_r2_hazard_needs_rendezvous_overlap():
+    """Differing branch schedules under a pod-divergent predicate are
+    FINE while every collective stays on axes the predicate is uniform
+    over (psum over 'data' within a pod) — R2's hazard intersection."""
+
+    def f(x):
+        pred = lax.axis_index("pod") == 0
+        return lax.cond(pred, lambda v: lax.psum(v, "data"),
+                        lambda v: v, x)
+
+    an = analyze_jaxpr(_jaxpr(f, jnp.float32(0)), MESH)
+    (rec,) = an.conds
+    assert len(set(rec.branch_seqs)) == 2      # schedules DO differ
+    assert check_branch_schedules(an, "t") == []
+    # but R1 still applies to the guarded psum? no: psum over 'data'
+    # rendezvouses only on 'data', where the predicate is uniform
+    assert check_divergent_collectives(an, "t") == []
+
+
+def test_mismatch_marker_poisons_parent_sequence():
+    """A nested cond whose branches disagree contributes MISMATCH to
+    the enclosing branch sequence, which R2 treats as always-different
+    and worst-case whole-mesh rendezvous."""
+
+    def f(x):
+        inner_pred = x > 0                      # uniform (input default)
+        outer = lax.axis_index("pod") == 0
+
+        def true_branch(v):
+            return lax.cond(v > 1, lambda u: lax.psum(u, "pod"),
+                            lambda u: u, v)
+
+        return lax.cond(outer, true_branch, lambda v: v,
+                        jnp.where(inner_pred, x, -x))
+
+    an = analyze_jaxpr(_jaxpr(f, jnp.float32(0)), MESH)
+    outer_rec = [r for r in an.conds if "[branch" not in r.path][0]
+    # jax orders cond branches (false, true): the nested mismatching
+    # cond lives in the true branch, index 1
+    assert MISMATCH in outer_rec.branch_seqs[1]
+    assert outer_rec.branch_seqs[0] == ()
+    r2 = check_branch_schedules(an, "t")
+    assert any(MISMATCH[0] in str(f.detail["branch_sequences"])
+               for f in r2)
+
+
+# ---------------------------------------------------------------------------
+# the real thing: the shipped _search_loop slice is clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_plans():
+    from repro.configs.base import BFSConfig
+    from repro.core.engine import plan_bfs
+    from repro.graph.formats import build_blocked, build_blocked_1d
+    from repro.graph.rmat import rmat_graph
+    from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    g2 = build_blocked(e, 1, 1, align=32, cap_pad=32)
+    g1 = build_blocked_1d(e, 1, align=32, cap_pad=32)
+    return [
+        plan_bfs(g2, BFSConfig(decomposition="2d"), make_local_mesh(1, 1)),
+        plan_bfs(g1, BFSConfig(decomposition="1d"), make_local_mesh_1d(1)),
+        plan_bfs(g1, BFSConfig(decomposition="1ds"), make_local_mesh_1d(1)),
+    ]
+
+
+def test_search_loop_slice_is_clean(small_plans):
+    """The shipped whole-search program (the ``_search_loop`` while +
+    level bodies) linted in-process on a 1x1 mesh: every collective's
+    enclosing predicates are uniform over its rendezvous, no findings.
+    This is ``sync_modes`` being *checked*, not trusted."""
+    for plan in small_plans:
+        assert plan.lint() == [], plan.cfg.decomposition
+
+
+def test_search_loop_sites_are_synced(small_plans):
+    """Structure of the clean result: the 2d search jaxpr's while body
+    does issue collectives under the loop predicate, and that predicate
+    is uniform over the whole mesh (the pmax'd lockstep sync)."""
+    from repro.analysis.registry import _graph_sds
+    plan = small_plans[0]
+    mesh_axes = tuple(plan.mesh.shape)
+    cj = jax.make_jaxpr(plan.build_fn())(
+        _graph_sds(plan), jax.ShapeDtypeStruct((), np.int32))
+    an = analyze_jaxpr(cj, mesh_axes)
+    guarded = [s for s in an.sites
+               if any(p.kind == "while" for p in s.preds)]
+    assert guarded, "search loop lost its collectives?"
+    full = frozenset(mesh_axes)
+    for s in guarded:
+        for p in s.preds:
+            assert p.unif == full, (s.kind, p)
