@@ -12,6 +12,26 @@ import time
 import numpy as np
 
 
+def _monitor_from(payload):
+    """Opt-in straggler detection over per-root wall times: payload
+    ``straggler`` truthy enables it (a dict passes window/factor/
+    min_samples through).  Events land in the timing summary."""
+    opts = payload.get("straggler")
+    if not opts:
+        return None
+    from repro.runtime.straggler import StragglerMonitor
+    return StragglerMonitor(**(opts if isinstance(opts, dict) else {}))
+
+
+def _monitor_block(monitor):
+    if monitor is None:
+        return {}
+    return {"straggler_events": [
+        {"step": s, "dt_s": dt, "p95_s": p95}
+        for s, dt, p95 in monitor.events],
+        "straggler_deadline_s": monitor.deadline}
+
+
 def _build_store_phase(payload):
     from repro.ckpt.graph_store import GraphStore, plan_bfs_from_store
     from repro.configs.base import BFSConfig
@@ -64,15 +84,19 @@ def _build_store_phase(payload):
     out0 = eng.search(int(roots[0]))
     out0[0].block_until_ready()
     first_s = time.perf_counter() - t3        # includes dispatch warmup
+    monitor = _monitor_from(payload)
     times = []
-    for r in roots:
+    for step, r in enumerate(roots):
         ta = time.perf_counter()
         out = eng.search(int(r))
         out[0].block_until_ready()
         times.append(time.perf_counter() - ta)
+        if monitor is not None:
+            monitor.observe(step, times[-1])
     hmean = len(times) / sum(1.0 / t for t in times)
     print(json.dumps({
-        **extra, "phase": payload["phase"], "decomposition": decomp,
+        **extra, **_monitor_block(monitor),
+        "phase": payload["phase"], "decomposition": decomp,
         "n_pad": g.part.n, "p": g.part.p,
         "compile_s": eng.compile_s, "ship_s": eng.ship_s,
         "first_traversal_s": first_s, "times": times, "hmean_s": hmean,
@@ -222,8 +246,9 @@ def main():
         }))
         return
 
+    monitor = _monitor_from(payload)
     times, counters = [], None
-    for r in roots:
+    for step, r in enumerate(roots):
         # time the device search only (block on parents), converting to
         # host results outside the timed region — same methodology as
         # the pre-engine hand-rolled loop
@@ -231,6 +256,8 @@ def main():
         out = eng.search(int(r))
         out[0].block_until_ready()
         times.append(time.perf_counter() - t0)
+        if monitor is not None:
+            monitor.observe(step, times[-1])
         res = eng.to_result(out)
         counters = res.counters
         if payload.get("validate"):
@@ -261,6 +288,7 @@ def main():
         "hlo_collectives": eng.collective_counts(),
         "compile_s": eng.compile_s, "ship_s": eng.ship_s,
         "teps": edges.m_input / hmean, **levels, **mem,
+        **_monitor_block(monitor),
     }))
 
 

@@ -222,10 +222,36 @@ def plan_case(decomposition: str, overrides: Dict[str, Any], *,
     return plan_bfs(graph, cfg, mesh, local_mode=local_mode)
 
 
+def validator_counts(decomposition: str) -> Dict[str, int]:
+    """Collective counts of the lowered Graph500 parent-tree validator
+    for one registered decomposition (lowering only).  The validator is
+    schedule-dim-independent — one program per decomposition — and its
+    footprint is pinned against ``comm_model.validate_collective_budget``
+    in tests/test_perf_guard.py."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.engine import hlo_collective_counts
+    from repro.core.validate import build_validate_fn
+
+    plan = plan_case(decomposition, {}, instrument=False)
+    fn = build_validate_fn(plan)
+    arrays = plan.graph.device_arrays()
+    gsds = {k: _sds(arrays[k]) for k in plan.entry.edge_keys}
+    pi = jax.ShapeDtypeStruct(np.asarray(arrays["deg_A"]).shape,
+                              np.int32)
+    txt = fn.lower(gsds, pi, jnp.int32(0)).as_text()
+    return hlo_collective_counts(txt)
+
+
 def collect_counts() -> Dict[str, Any]:
     """The perf-guard payload: lowered collective counts of every
     ``budget_cases()`` case (td/bu level bodies + whole search,
-    instrument on and off), keyed by canonical case name."""
+    instrument on and off), keyed by canonical case name — plus the
+    parent-tree validators under ``"validators"``."""
+    from repro.core.decomp import registered_decompositions
+
     out: Dict[str, Any] = {"pc": GRID_PC, "p": STRIP_P}
     for case in budget_cases():
         row = {}
@@ -238,6 +264,8 @@ def collect_counts() -> Dict[str, Any]:
                 "bu": level_counts(plan, "bu"),
             }
         out[case.name] = row
+    out["validators"] = {name: validator_counts(name)
+                         for name in registered_decompositions()}
     return out
 
 

@@ -28,8 +28,38 @@ def reshard_state(state: Any, specs: Any, new_mesh) -> Any:
                         hasattr(x, "shape"))
 
 
-def repartition_graph(edges: EdgeList, pr: int, pc: int, align: int = 128,
-                      cap_pad: int = 128) -> BlockedGraph:
+def repartition_graph(edges: "EdgeList | None" = None, pr: int = 1,
+                      pc: int = 1, align: int = 128, cap_pad: int = 128,
+                      *, spec=None, mesh=None, decomposition: str = "2d",
+                      **build_kw) -> BlockedGraph:
     """Re-block a graph for a new (pr, pc) grid — used when a pod joins or
-    leaves mid-campaign (BFS state is cheap to rebuild: one search)."""
+    leaves mid-campaign (BFS state is cheap to rebuild: one search).
+
+    Two sources:
+
+    * **host EdgeList** (legacy): re-run ``build_blocked`` on the host
+      edge array.
+    * **BuildSpec** (born-sharded, PR 8): pass ``spec=`` (a
+      ``dist_build.BuildSpec``) and ``mesh=`` sized for the NEW grid —
+      the graph is rebuilt device-side by ``dist_build`` straight onto
+      the new (pr, pc) blocking from the counter stream; no host edge
+      list ever exists.  ``decomposition`` picks the target format
+      ("2d" checkerboard, "1d"/"1ds" strips on pr*pc devices), and
+      extra ``build_kw`` (route_slack, max_attempts, ...) flow through
+      to ``dist_build``.  Bit-identical to a host re-block of the same
+      stream at matching align/cap_pad (test_faultinject pins p=1
+      parity).
+    """
+    if spec is not None:
+        if mesh is None:
+            raise ValueError(
+                "repartition_graph(spec=...) needs mesh= sized for the "
+                "new grid (BuildSpec repartitioning is device-side)")
+        from repro.graph.dist_build import dist_build
+        graph, _ = dist_build(spec, decomposition, mesh, (pr, pc),
+                              align=align, cap_pad=cap_pad, **build_kw)
+        return graph
+    if edges is None:
+        raise ValueError("repartition_graph needs an EdgeList or a "
+                         "BuildSpec (spec=...)")
     return build_blocked(edges, pr, pc, align=align, cap_pad=cap_pad)

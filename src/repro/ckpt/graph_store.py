@@ -20,10 +20,24 @@ both the distributed build and the XLA compile:
     mesh-shape mismatch (a silently wrong graph is worse than a
     recompile).
 
-Store layout::
+Store layout (format v2, one file PER SHARD)::
 
-    <root>/graphs/<name>/step_NNNNNNNNNN/{host0.npz, meta.json}
+    <root>/graphs/<name>/step_NNNNNNNNNN/{shard_00000.npz, ...,
+                                          meta.json}
     <root>/execs/exec_<key>_<hash16>/{payload.bin, trees.pkl, meta.json}
+
+**Content integrity.**  ``meta.json`` carries a CRC32 per shard
+(computed over each array's name, dtype, shape, and raw bytes — not
+over the npz container, whose zip timestamps are not deterministic).
+``load_graph`` verifies every shard's CRC; a corrupted, truncated, or
+unreadable shard is *quarantined* (renamed ``*.quarantined``) and
+**regenerated in place** from the stored BuildSpec's counter stream
+(``graph/dist_build.regen_shard`` — only that shard's slice of the
+stream, bit-identical by stream-slice independence).  The regenerated
+arrays must reproduce the stored CRC exactly or the load fails loudly;
+``store.last_load_report`` records what was checked and repaired.
+Writers that crash between ``mkdtemp`` and the atomic rename leak
+``.tmp_*`` directories — ``GraphStore.__init__`` sweeps them.
 """
 from __future__ import annotations
 
@@ -33,8 +47,9 @@ import pickle
 import shutil
 import tempfile
 import time
+import zlib
 from dataclasses import asdict, is_dataclass
-from typing import Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -49,7 +64,7 @@ try:
 except Exception:                                    # pragma: no cover
     _serialize_exec = None
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 
 _GRAPH_KINDS = {"Blocked1DGraph": Blocked1DGraph,
                 "BlockedGraph": BlockedGraph}
@@ -62,6 +77,42 @@ _SCALAR_FIELDS = {
 
 def _mesh_axes(mesh) -> list:
     return [[str(k), int(v)] for k, v in mesh.shape.items()]
+
+
+def shard_crc32(arrays: Dict[str, np.ndarray]) -> int:
+    """CRC32 over one shard's arrays in a canonical byte stream: for
+    each field in sorted order, its name, dtype string, shape, and raw
+    C-contiguous bytes.  Container-independent on purpose — npz zip
+    metadata (timestamps) is not reproducible, array content is."""
+    c = 0
+    for k in sorted(arrays):
+        v = np.ascontiguousarray(arrays[k])
+        c = zlib.crc32(k.encode(), c)
+        c = zlib.crc32(str(v.dtype).encode(), c)
+        c = zlib.crc32(np.asarray(v.shape, np.int64).tobytes(), c)
+        c = zlib.crc32(v.tobytes(), c)
+    return c & 0xFFFFFFFF
+
+
+def _n_shards(part) -> int:
+    return part.p
+
+
+def _shard_slice(arrays: Dict[str, np.ndarray], part,
+                 k: int) -> Dict[str, np.ndarray]:
+    """Shard ``k``'s slice of every field (leading block dims dropped:
+    (p, ...) -> (...) for strips, (pr, pc, ...) -> (...) for 2d)."""
+    if isinstance(part, Partition1D):
+        return {f: v[k] for f, v in arrays.items()}
+    return {f: v[k // part.pc, k % part.pc] for f, v in arrays.items()}
+
+
+def _part_from_meta(meta: Dict) -> Any:
+    pm = json.loads(meta["part"])
+    if pm["kind"] == "1d":
+        return Partition1D(n=pm["n"], n_orig=pm["n_orig"], p=pm["p"])
+    return Partition2D(n=pm["n"], n_orig=pm["n_orig"], pr=pm["pr"],
+                       pc=pm["pc"])
 
 
 def plan_exec_hash(plan) -> str:
@@ -83,6 +134,27 @@ class GraphStore:
     def __init__(self, root: str, keep: int = 3):
         self.root = root
         self.keep = keep
+        # forensic state of the most recent load_graph (shards checked,
+        # shards repaired + why); None until a graph is loaded
+        self.last_load_report: Optional[Dict[str, Any]] = None
+        # a writer that died between mkdtemp and the atomic rename left
+        # an orphaned .tmp_* dir that can never be published — sweep on
+        # open (single-writer discipline: opening a store while another
+        # process is mid-save is outside the store's contract)
+        self.swept: List[str] = self._sweep_tmp()
+
+    def _sweep_tmp(self) -> List[str]:
+        removed = []
+        if not os.path.isdir(self.root):
+            return removed
+        for dirpath, dirnames, _ in os.walk(self.root):
+            for d in list(dirnames):
+                if d.startswith(".tmp_"):
+                    full = os.path.join(dirpath, d)
+                    shutil.rmtree(full, ignore_errors=True)
+                    dirnames.remove(d)
+                    removed.append(full)
+        return removed
 
     # ------------------------------------------------------------------
     # graphs
@@ -129,41 +201,139 @@ class GraphStore:
         if step is None:
             latest = checkpoint.latest_step(self._graph_dir(name))
             step = 0 if latest is None else latest + 1
-        return checkpoint.save(self._graph_dir(name), step, arrays,
-                               meta=meta, keep=self.keep)
+        shards = [_shard_slice(arrays, part, k)
+                  for k in range(_n_shards(part))]
+        meta["shards"] = len(shards)
+        meta["shard_crc32"] = [shard_crc32(s) for s in shards]
+        gdir = self._graph_dir(name)
+        os.makedirs(gdir, exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=gdir, prefix=".tmp_")
+        try:
+            for k, s in enumerate(shards):
+                np.savez(os.path.join(tmp, f"shard_{k:05d}.npz"), **s)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({**meta, "step": step, "saved_at": time.time()},
+                          f)
+            final = os.path.join(gdir, f"step_{step:010d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        checkpoint._retain(gdir, self.keep)
+        return final
+
+    def _read_shard(self, path: str) -> Dict[str, np.ndarray]:
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+
+    def _repair_shard(self, path: str, k: int, meta: Dict, part,
+                      want_crc: int) -> Dict[str, np.ndarray]:
+        """Quarantine shard ``k``'s file and regenerate its arrays from
+        the stored BuildSpec's counter stream; the result must hit the
+        stored CRC exactly (stream-slice independence makes the regen
+        bit-identical to the original build) or the repair fails."""
+        from repro.graph.dist_build import BuildSpec, regen_shard
+        if "spec" not in meta:
+            raise RuntimeError(
+                f"shard {k} of {os.path.dirname(path)} failed its CRC "
+                f"check and the graph was stored without a BuildSpec — "
+                f"cannot regenerate")
+        if os.path.exists(path):
+            os.replace(path, path + ".quarantined")
+        spec = BuildSpec(**json.loads(meta["spec"]))
+        arrs = regen_shard(spec, meta["graph_kind"], part, k,
+                           json.loads(meta["scalars"]),
+                           json.loads(meta["fields"]))
+        got = shard_crc32(arrs)
+        if got != want_crc:
+            raise RuntimeError(
+                f"regenerated shard {k} CRC {got:#010x} does not match "
+                f"the stored CRC {want_crc:#010x} — the store meta and "
+                f"the BuildSpec disagree; refusing to publish")
+        tmp = path + ".tmp_regen.npz"
+        try:
+            np.savez(tmp, **arrs)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+            raise
+        return arrs
 
     def load_graph(self, name: str, mesh=None,
                    step: Optional[int] = None, expect_spec=None,
-                   row_axis: str = "data", col_axis: str = "model"):
-        """Reconstruct a stored graph.  ``expect_spec`` makes a stale
-        graph fail loudly (spec-hash mismatch raises instead of handing
-        back the wrong edges); ``mesh`` validates its axis sizes against
-        the stored partition and lands every array sharded over the
-        graph axes (ready for BFSEngine's no-round-trip ship)."""
+                   row_axis: str = "data", col_axis: str = "model",
+                   repair: bool = True):
+        """Reconstruct a stored graph, verifying every shard's CRC.
+
+        ``expect_spec`` makes a stale graph fail loudly (spec-hash
+        mismatch raises instead of handing back the wrong edges);
+        ``mesh`` validates its axis sizes against the stored partition
+        and lands every array sharded over the graph axes (ready for
+        BFSEngine's no-round-trip ship).
+
+        A shard whose file is corrupted, truncated, or missing is
+        quarantined and regenerated from the stored BuildSpec
+        (``repair=False`` raises instead); the regenerated shard must
+        reproduce the stored CRC bit-for-bit.  ``self.last_load_report``
+        records the verification outcome either way."""
         gdir = self._graph_dir(name)
         if step is None:
             step = checkpoint.latest_step(gdir)
             if step is None:
                 raise FileNotFoundError(f"no graph steps under {gdir}")
-        with open(os.path.join(gdir, f"step_{step:010d}",
-                               "meta.json")) as f:
+        sdir = os.path.join(gdir, f"step_{step:010d}")
+        with open(os.path.join(sdir, "meta.json")) as f:
             meta = json.load(f)
-        expect = {"format_version": FORMAT_VERSION}
+        if meta.get("format_version") != FORMAT_VERSION:
+            raise ValueError(
+                f"graph {name!r} step {step} has format_version="
+                f"{meta.get('format_version')}; this reader handles "
+                f"{FORMAT_VERSION} (re-save the graph)")
         if expect_spec is not None:
-            expect["spec_hash"] = checkpoint.config_hash(expect_spec)
+            want = checkpoint.config_hash(expect_spec)
+            if meta.get("spec_hash") != want:
+                raise ValueError(
+                    f"graph {name!r} step {step} spec_hash="
+                    f"{meta.get('spec_hash')} does not match the "
+                    f"expected spec ({want})")
+        part = _part_from_meta(meta)
         fields = json.loads(meta["fields"])
-        like = {k: np.zeros(shape, dtype=dt)
-                for k, (shape, dt) in fields.items()}
-        arrays, meta = checkpoint.restore(gdir, step, like,
-                                          expect_meta=expect)
-        part_meta = json.loads(meta["part"])
-        if part_meta["kind"] == "1d":
-            part = Partition1D(n=part_meta["n"], n_orig=part_meta["n_orig"],
-                               p=part_meta["p"])
+        crcs = meta["shard_crc32"]
+        shards = []
+        repaired = []
+        for k in range(meta["shards"]):
+            path = os.path.join(sdir, f"shard_{k:05d}.npz")
+            arrs, err = None, None
+            try:
+                arrs = self._read_shard(path)
+                got = shard_crc32(arrs)
+                if got != crcs[k]:
+                    err = (f"CRC mismatch: {got:#010x} != stored "
+                           f"{crcs[k]:#010x}")
+            except Exception as e:       # unreadable/truncated npz
+                err = f"unreadable shard: {e}"
+            if err is not None:
+                if not repair:
+                    raise RuntimeError(
+                        f"graph {name!r} step {step} shard {k}: {err} "
+                        f"(repair disabled)")
+                arrs = self._repair_shard(path, k, meta, part, crcs[k])
+                repaired.append({"shard": k, "reason": err})
+            shards.append(arrs)
+        self.last_load_report = {
+            "name": name, "step": step, "shards": meta["shards"],
+            "repaired": repaired,
+        }
+        arrays = {}
+        for fname, (shape, dt) in fields.items():
+            stacked = np.stack([s[fname] for s in shards])
+            arrays[fname] = stacked.reshape(shape).astype(dt, copy=False)
+        if isinstance(part, Partition1D):
             axes, sizes = (row_axis,), (part.p,)
         else:
-            part = Partition2D(n=part_meta["n"], n_orig=part_meta["n_orig"],
-                               pr=part_meta["pr"], pc=part_meta["pc"])
             axes, sizes = (row_axis, col_axis), (part.pr, part.pc)
         if mesh is not None:
             for ax, want in zip(axes, sizes):

@@ -388,3 +388,32 @@ class AlphaBeta:
         gather = pr * self.alpha_n + (n / pc / 8) * self.beta_n
         updates = pc * self.alpha_n + (n / (pr * pc)) * 8 * self.beta_n
         return rotate + gather + updates
+
+
+# ---------------------------------------------------------------------------
+# Graph500 validator collective budget (core/validate.py)
+# ---------------------------------------------------------------------------
+
+
+def validate_collective_budget(decomposition: str) -> Dict[str, int]:
+    """Whole-program collective budget for the sharded parent-tree
+    validator, per decomposition (pinned in tests/test_perf_guard.py).
+
+    The validator spends exactly: one tiled all_gather per mesh axis to
+    replicate the candidate parents (1 for the strip entries, 2 for
+    2d), one psum to OR the per-shard tree-edge-existence marks, and
+    one psum for the final (6,) verdict vector.  Everything else —
+    pointer-doubling depth resolution, per-edge level/reachability
+    checks — is shard-local.
+    """
+    if decomposition == "2d":
+        gathers = 2
+    elif decomposition in ("1d", "1ds"):
+        gathers = 1
+    else:
+        raise ValueError(
+            f"no validator collective budget for {decomposition!r}; "
+            "extend validate_collective_budget alongside the new "
+            "decomposition's local_edges hook")
+    return {"all-gather": gathers, "all-reduce": 2,
+            "total": gathers + 2}

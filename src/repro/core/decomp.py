@@ -127,6 +127,19 @@ class Decomposition:
     # lower ONE level body in isolation for the R4 budget check.
     level_steps: Optional[Tuple[Callable, Callable]] = None
 
+    # ---- edge-membership hook (Graph500 parent-tree validator) ------------
+    #
+    # ``local_edges(g, part, axes) -> (u, v, valid)`` enumerates this
+    # shard's edge slots in GLOBAL layout-A vertex ids: ``u[k] -> v[k]``
+    # is a directed edge stored locally iff ``valid[k]``; padded
+    # capacity slots must still yield in-range (u, v) so downstream
+    # gathers stay safe.  ``edge_keys`` names the graph device-array
+    # fields the hook reads, so the validator ships only those to the
+    # mesh.  Entries without a hook (None) cannot be validated
+    # device-side — ``core/validate.py`` raises a clear error for them.
+    edge_keys: Tuple[str, ...] = ()
+    local_edges: Optional[Callable] = None
+
     # ---- PartitionSpec layout (shared by single-root + batch programs) ----
 
     def graph_spec(self, axes: Tuple[str, ...]) -> P:
@@ -410,6 +423,31 @@ def _validate_2d(part, statics: PlanStatics) -> None:
                          "(pass graph.cap_seg)")
 
 
+def _local_edges_2d(g, part, axes):
+    """(u, v, valid) for one (i, j) block in global layout-A ids: CSC
+    ``edge_src`` is the block-local source (column j owns sources
+    [j*nc, (j+1)*nc)), ``row_idx`` the block-local dest (row i owns
+    dests [i*nr, (i+1)*nr)); padded slots hold 0 so the rebased ids
+    stay in range."""
+    i = lax.axis_index(axes[0])
+    j = lax.axis_index(axes[1])
+    u = (j * part.nc + g["edge_src"]).astype(jnp.int32)
+    v = (i * part.nr + g["row_idx"]).astype(jnp.int32)
+    valid = jnp.arange(u.shape[0], dtype=jnp.int32) < g["nnz"]
+    return u, v, valid
+
+
+def _local_edges_1d(g, part, axes):
+    """(u, v, valid) for one strip: CSR ``col_idx`` is already the
+    GLOBAL source id, ``edge_dst`` the strip-local dest (strip i owns
+    [i*chunk, (i+1)*chunk)); padded slots hold 0."""
+    i = lax.axis_index(axes[0])
+    u = g["col_idx"].astype(jnp.int32)
+    v = (i * part.chunk + g["edge_dst"]).astype(jnp.int32)
+    valid = jnp.arange(u.shape[0], dtype=jnp.int32) < g["nnz"]
+    return u, v, valid
+
+
 register_decomposition(Decomposition(
     name="2d", partition_cls=Partition2D, graph_cls=BlockedGraph,
     n_axes=2, axis_sizes=lambda part: (part.pr, part.pc),
@@ -419,7 +457,9 @@ register_decomposition(Decomposition(
     # collective-permute) — hence sync_modes=True above
     rendezvous_axes=lambda axes, mesh_axes: tuple(mesh_axes),
     schedule_dims=("fold_mode", "compact_updates", "expand_chunks"),
-    level_steps=(topdown_level, bottomup_level)))
+    level_steps=(topdown_level, bottomup_level),
+    edge_keys=("edge_src", "row_idx", "nnz"),
+    local_edges=_local_edges_2d))
 
 
 # ---------------------------------------------------------------------------
@@ -497,7 +537,9 @@ register_decomposition(Decomposition(
     # is safe, so pods never enter the rendezvous
     rendezvous_axes=lambda axes, mesh_axes: tuple(axes),
     schedule_dims=("expand_chunks",),
-    level_steps=(topdown_level_1d, bottomup_level_1d)))
+    level_steps=(topdown_level_1d, bottomup_level_1d),
+    edge_keys=("col_idx", "edge_dst", "nnz"),
+    local_edges=_local_edges_1d))
 
 
 # ---------------------------------------------------------------------------
@@ -547,4 +589,6 @@ register_decomposition(Decomposition(
     validate=_validate_1ds,
     rendezvous_axes=lambda axes, mesh_axes: tuple(axes),
     schedule_dims=("frontier_codec", "expand_chunks"),
-    level_steps=(topdown_level_1ds, bottomup_level_1ds)))
+    level_steps=(topdown_level_1ds, bottomup_level_1ds),
+    edge_keys=("col_idx", "edge_dst", "nnz"),
+    local_edges=_local_edges_1d))

@@ -60,6 +60,8 @@ class BFSResult:
     counters: Dict[str, float]   # whole-search totals (paper 64-bit words)
     level_stats: np.ndarray      # (MAX_LEVELS, 5): n_f, m_f, mode, used,
     #                              measured expand words that level
+    validation: Optional[Any] = None  # ValidationReport when run(...,
+    #                              validate=True); None otherwise
 
 
 @dataclass
@@ -428,14 +430,47 @@ class BFSEngine:
             level_stats=np.asarray(stats),
         )
 
-    def run(self, root: int) -> BFSResult:
-        """One whole search against the shipped graph, results on host."""
-        return self.to_result(self.search(root))
+    def run(self, root: int, validate: bool = False) -> BFSResult:
+        """One whole search against the shipped graph, results on host.
 
-    def run_many(self, roots: Sequence[int]) -> List[BFSResult]:
+        ``validate=True`` runs the sharded Graph500 parent-tree
+        validator (core/validate.py) on the DEVICE parent array before
+        it ever crosses to host: the report is attached as
+        ``result.validation`` and a failing tree raises
+        ``ValidationError`` (the result is recoverable from the
+        exception's report plus ``validate_parents`` for forensics).
+        The validator program is built and compiled lazily on the first
+        validated run and reused after that.
+        """
+        out = self.search(root)
+        res = self.to_result(out)
+        if validate:
+            from repro.core import validate as _validate
+            rep = _validate.validate_device(self, self._check_root(root),
+                                            out[0])
+            res.validation = rep
+            if not rep.ok:
+                raise _validate.ValidationError(rep)
+        return res
+
+    def run_many(self, roots: Sequence[int], validate: bool = False,
+                 monitor=None) -> List[BFSResult]:
         """The Graph500 loop: sequential searches from many roots, all
-        against the one shipped graph + compiled program."""
-        return [self.run(int(r)) for r in roots]
+        against the one shipped graph + compiled program.
+
+        ``monitor`` accepts a ``runtime.straggler.StragglerMonitor``:
+        each root's wall time (search + host conversion + optional
+        validation) is fed through ``monitor.observe(step, dt)`` so
+        anomalously slow roots are recorded as events — reported by the
+        caller's timing summary, never raised here.
+        """
+        results = []
+        for step, r in enumerate(roots):
+            t0 = time.perf_counter()
+            results.append(self.run(int(r), validate=validate))
+            if monitor is not None:
+                monitor.observe(step, time.perf_counter() - t0)
+        return results
 
     # ---- pod-batched multi-source -----------------------------------------
 
@@ -477,3 +512,126 @@ class BFSEngine:
             n_levels=np.asarray(levels).astype(np.int64),
             level_stats=np.asarray(stats),
         )
+
+
+# ---------------------------------------------------------------------------
+# Self-healing session: bounded cap_x replan-retry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HealedRun:
+    """Result of ``run_bfs_healed``: the final (healthy) session plus
+    the structured escalation log — one entry per plan attempt, empty
+    detail when the first plan was already overflow-free."""
+    result: BFSResult
+    engine: BFSEngine
+    plan: BFSPlan
+    retry_log: List[Dict[str, Any]]
+
+
+def _overflow_levels_1ds(plan: BFSPlan, stats) -> List[int]:
+    """Levels whose sparse exchange fell back to the dense bitmap.
+
+    The 1ds exchange NEVER raises on bucket overflow — it reverts the
+    level to the dense bitmap (parents stay exact, wire cost jumps to
+    the (p-1)*n/64 dense words).  The instrumented run records the
+    measured wire per level (stats col 4), so a fallback is detectable
+    host-side: a used top-down level whose wire matches the dense
+    formula instead of the sparse/compressed words its frontier size
+    (stats col 0) predicts.  The double check (== dense AND != sparse)
+    keeps frontier sizes sitting exactly at the crossover — where both
+    formulas agree and there is nothing to heal — out of the list."""
+    part, cfg = plan.part, plan.cfg
+    C = plan.statics.expand_chunks
+    p = part.p
+    stats = np.asarray(stats, dtype=np.float64)
+    n_f = stats[:, 0]
+    if cfg.frontier_codec == "packed":
+        sub = part.chunk // C
+        bits = comm_model.codec_bits(sub)
+        exp = np.array([comm_model.compressed_expand_1d_words(
+            f, p, bits, C) for f in n_f])
+    else:
+        exp = np.array([comm_model.sparse_expand_1d_words(f, p)
+                        for f in n_f])
+    dense = comm_model.chunked_expand_1d_level_words(part.n, p, C) \
+        if C > 1 else comm_model.expand_1d_level_words(part.n, p)
+    exp32 = np.float32(exp).astype(np.float64)
+    dense32 = float(np.float32(dense))
+    wire = stats[:, 4]
+    over = ((stats[:, 3] > 0) & (stats[:, 2] == 0)
+            & np.isclose(wire, dense32, rtol=1e-4)
+            & ~np.isclose(wire, exp32, rtol=1e-4))
+    return [int(i) for i in np.nonzero(over)[0]]
+
+
+def run_bfs_healed(graph, cfg: BFSConfig, mesh, root: int, *,
+                   max_attempts: int = 3, store=None,
+                   exec_key: str = "healed", validate: bool = False,
+                   **plan_kw) -> HealedRun:
+    """Plan + compile + run with bounded ``cap_x`` replan-retry.
+
+    For the "1ds" decomposition an undersized sparse-exchange bucket
+    capacity does not corrupt anything — overflowing levels silently
+    revert to the dense bitmap — but it forfeits exactly the wire
+    savings the sparse exchange exists for.  This driver detects the
+    fallback from an instrumented probe run, escalates ``cap_x``
+    geometrically (x2 per attempt, clamped to the chunk size where
+    overflow is impossible), replans + recompiles, and retries, at most
+    ``max_attempts`` plan attempts.  Parents are bit-identical across
+    every attempt (fallback levels are exact); the escalation history
+    lands in ``HealedRun.retry_log``.  Exhausting the attempts raises
+    ``CapacityOverflow`` carrying the full history.
+
+    Non-1ds decompositions have no cap_x knob: single attempt, empty
+    retry log.
+    """
+    from repro.runtime.retry import CapacityOverflow, RetryAttempt
+
+    if cfg.decomposition != "1ds":
+        plan = plan_bfs(graph, cfg, mesh, **plan_kw)
+        engine = plan.compile(store=store, exec_key=exec_key)
+        return HealedRun(result=engine.run(root, validate=validate),
+                         engine=engine, plan=plan, retry_log=[])
+
+    probe_cfg = cfg if cfg.instrument else replace(cfg, instrument=True)
+    history: List[RetryAttempt] = []
+    cap_x = int(plan_kw.pop("cap_x", 0))
+    part = graph.part
+    for attempt in range(1, max_attempts + 1):
+        plan = plan_bfs(graph, probe_cfg, mesh, cap_x=cap_x, **plan_kw)
+        cap_now = plan.statics.cap_x
+        engine = plan.compile(store=store,
+                              exec_key=f"{exec_key}-x{cap_now}")
+        res = engine.run(root, validate=validate)
+        levels = _overflow_levels_1ds(plan, res.level_stats)
+        if not levels:
+            history.append(RetryAttempt(
+                attempt=attempt, cap_name="cap_x", cap_value=cap_now,
+                outcome="ok", detail={}))
+            if probe_cfg is not cfg:
+                # caller wanted the fast program: rebuild it at the
+                # healthy cap (parents bit-identical by construction)
+                plan = plan_bfs(graph, cfg, mesh, cap_x=cap_now,
+                                **plan_kw)
+                engine = plan.compile(store=store,
+                                      exec_key=f"{exec_key}-x{cap_now}")
+                res = engine.run(root, validate=validate)
+            log = [a.to_json() for a in history]
+            # drop the no-op log when the FIRST plan was already clean
+            if len(log) == 1 and log[0]["outcome"] == "ok":
+                log = []
+            return HealedRun(result=res, engine=engine, plan=plan,
+                             retry_log=log)
+        history.append(RetryAttempt(
+            attempt=attempt, cap_name="cap_x", cap_value=cap_now,
+            outcome="overflow", detail={"levels": levels}))
+        nxt = min(cap_now * 2, part.chunk)
+        if nxt <= cap_now:
+            break
+        cap_x = nxt
+    raise CapacityOverflow(
+        f"cap_x escalation exhausted after {len(history)} attempts "
+        f"(levels still falling back to the dense bitmap)",
+        cap_name="cap_x", cap_value=cap_now, history=history)

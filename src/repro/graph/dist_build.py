@@ -56,8 +56,9 @@ from repro.core import comm_model
 from repro.core.compat import shard_map
 from repro.core.partition import make_partition, make_partition_1d
 from repro.graph.formats import Blocked1DGraph, BlockedGraph, _round_up
-from repro.graph.rmat import rmat_edges_counter_jax
+from repro.graph.rmat import rmat_edges_counter, rmat_edges_counter_jax
 from repro.launch.mesh import COL_AXIS, ROW_AXIS
+from repro.runtime.retry import CapacityOverflow, RetryAttempt
 
 
 @dataclass(frozen=True)
@@ -239,10 +240,11 @@ def dist_build_1d(spec: BuildSpec, p: int, mesh, *, align: int = 128,
     stats = np.asarray(stats_all)                # (p, 5) scalars only
     t1 = time.perf_counter()
     if stats[:, 3].max() > 0:
-        raise RuntimeError(
+        raise CapacityOverflow(
             f"1D routing bucket overflow by {int(stats[:, 3].max())} "
             f"records (cap_route={cap_route}); rebuild with a larger "
-            f"route_slack (> {route_slack})")
+            f"route_slack (> {route_slack})",
+            cap_name="route_slack", cap_value=route_slack)
     nnz = stats[:, 0].astype(np.int64)
     cap = _round_up(max(int(nnz.max()), 1), cap_pad)
     cap_nzc = _round_up(max(int(stats[:, 1].max()), 1), 8)
@@ -388,10 +390,11 @@ def dist_build_2d(spec: BuildSpec, pr: int, pc: int, mesh, *,
     stats = np.asarray(stats_all).reshape(p, -1)
     t1 = time.perf_counter()
     if stats[:, 5].max() > 0:
-        raise RuntimeError(
+        raise CapacityOverflow(
             f"2D routing bucket overflow by {int(stats[:, 5].max())} "
             f"records (cap_r1={cap_r1}, cap_r2={cap_r2}); rebuild with "
-            f"a larger route_slack (> {route_slack})")
+            f"a larger route_slack (> {route_slack})",
+            cap_name="route_slack", cap_value=route_slack)
     nnz = stats[:, 0].astype(np.int64)
     cap = _round_up(max(int(nnz.max()), 1), cap_pad)
     cap_nzc = _round_up(max(int(stats[:, 1].max()), 1), 8)
@@ -458,17 +461,215 @@ def dist_build_2d(spec: BuildSpec, pr: int, pc: int, mesh, *,
     return graph, info
 
 
-def dist_build(spec: BuildSpec, decomposition: str, mesh, grid, **kw):
+def dist_build(spec: BuildSpec, decomposition: str, mesh, grid,
+               max_attempts: int = 3, **kw):
     """Dispatch on decomposition: "1d"/"1ds" build the strip format on
     p = prod(grid) devices, "2d" the checkerboard.  ``grid`` is (pr, pc),
-    or an int / 1-tuple p for the 1D formats."""
+    or an int / 1-tuple p for the 1D formats.
+
+    Routing-bucket overflow self-heals: the single-shot builders
+    (``dist_build_1d`` / ``dist_build_2d``) still raise
+    ``CapacityOverflow`` loudly, but this dispatcher catches it,
+    doubles ``route_slack``, and rebuilds — at most ``max_attempts``
+    total attempts, each recorded in ``info["retry_log"]`` (empty when
+    the first attempt routes clean).  The rebuilt graph is bit-identical
+    to a first-try build with the final slack: the edge stream is a
+    pure function of (seed, edge index) and slack only sizes the
+    exchange buckets.  Exhaustion re-raises with the full escalation
+    history attached."""
     if isinstance(grid, int):
         grid = (grid, 1)
     elif len(grid) == 1:
         grid = (grid[0], 1)
     pr, pc = grid
     if decomposition in ("1d", "1ds"):
-        return dist_build_1d(spec, pr * pc, mesh, **kw)
-    if decomposition == "2d":
-        return dist_build_2d(spec, pr, pc, mesh, **kw)
-    raise ValueError(f"unknown decomposition {decomposition!r}")
+        build = lambda **k: dist_build_1d(spec, pr * pc, mesh, **k)
+    elif decomposition == "2d":
+        build = lambda **k: dist_build_2d(spec, pr, pc, mesh, **k)
+    else:
+        raise ValueError(f"unknown decomposition {decomposition!r}")
+
+    slack = float(kw.pop("route_slack", 1.5))
+    history = []
+    for attempt in range(1, max(1, max_attempts) + 1):
+        try:
+            graph, info = build(route_slack=slack, **kw)
+        except CapacityOverflow as e:
+            history.append(RetryAttempt(
+                attempt=attempt, cap_name="route_slack", cap_value=slack,
+                outcome="overflow", detail={"error": str(e)}))
+            if attempt >= max(1, max_attempts):
+                raise CapacityOverflow(
+                    f"routing overflow persisted through {attempt} build "
+                    f"attempts: {e}", cap_name="route_slack",
+                    cap_value=slack, history=history) from e
+            slack *= 2.0
+            continue
+        if history:
+            history.append(RetryAttempt(
+                attempt=attempt, cap_name="route_slack", cap_value=slack,
+                outcome="ok", detail={}))
+        info["retry_log"] = [a.to_json() for a in history]
+        return graph, info
+
+
+# ---------------------------------------------------------------------------
+# Host shard regeneration (GraphStore integrity repair)
+# ---------------------------------------------------------------------------
+#
+# A corrupted or truncated store shard is regenerated from the SAME
+# counter stream the device build consumed: ``rmat_edges_counter`` is a
+# pure function of (seed, edge index), and shard contents depend only on
+# the edge subset owned by that shard — so the host twin below filters
+# the full stream down to one shard's edges and replays phases 1+2 with
+# numpy, producing arrays bit-identical to the device build (the store
+# re-checks the stored CRC after regeneration to prove it).
+
+_REGEN_STEP = 1 << 22     # stream chunking: bounds peak host memory
+
+
+def _pad_i32(vals, cap: int, fill: int = 0) -> np.ndarray:
+    out = np.full(cap, fill, np.int32)
+    out[: len(vals)] = vals
+    return out
+
+
+def _shard_edges(spec: BuildSpec, keep) -> Tuple[np.ndarray, np.ndarray]:
+    """Deduped (u, v) int64 pairs of the symmetrized self-loop-free
+    stream for which ``keep(u, v)`` holds, sorted by (u, v) — the CSC
+    dedup order of ``_dedup_sorted``."""
+    us, vs = [], []
+    for s in range(0, spec.m_input, _REGEN_STEP):
+        cnt = min(_REGEN_STEP, spec.m_input - s)
+        u, v = rmat_edges_counter(spec.scale, spec.edge_factor, spec.a,
+                                  spec.b, spec.c, spec.seed, start=s,
+                                  count=cnt)
+        for a, b in ((u, v), (v, u)):
+            mask = (a != b) & keep(a, b)
+            if mask.any():
+                us.append(a[mask])
+                vs.append(b[mask])
+    if not us:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    pairs = np.stack([np.concatenate(us), np.concatenate(vs)], axis=1)
+    pairs = np.unique(pairs, axis=0)     # lexsort by (u, v) + dedup
+    return pairs[:, 0], pairs[:, 1]
+
+
+def regen_shard_1d(spec: BuildSpec, part, k: int, *, cap: int,
+                   cap_nzc: int) -> Dict[str, np.ndarray]:
+    """Strip ``k``'s Blocked1DGraph arrays (shard slice, no leading
+    block dim), bit-identical to ``dist_build_1d`` phase 2."""
+    chunk, n_pad = part.chunk, part.n
+    lo = k * chunk
+    gu, gv = _shard_edges(spec,
+                          lambda a, b: (b >= lo) & (b < lo + chunk))
+    u = gu.astype(np.int32)
+    v = (gv - lo).astype(np.int32)
+    nnz = len(u)
+    order = np.lexsort((u, v))           # CSR: primary v, secondary u
+    cnt = np.bincount(v, minlength=chunk)[:chunk] if nnz \
+        else np.zeros(chunk, np.int64)
+    uu, fi = (np.unique(u, return_index=True) if nnz
+              else (np.zeros(0, np.int32), np.zeros(0, np.int64)))
+    cp = np.full(cap_nzc + 1, nnz, np.int32)
+    cp[: len(fi)] = fi.astype(np.int32)
+    # the optional uncompressed strip CSC pointer (host builds with
+    # with_col_ptr=True persist it; regen_shard filters to the stored
+    # field set)
+    col_ptr = np.zeros(n_pad + 1, np.int64)
+    col_ptr[1:] = np.cumsum(np.bincount(u, minlength=n_pad)[:n_pad]) \
+        if nnz else 0
+    return {
+        "col_ptr": col_ptr.astype(np.int32),
+        "edge_src": _pad_i32(u, cap),
+        "row_idx": _pad_i32(v, cap),
+        "row_ptr": np.concatenate(
+            [[0], np.cumsum(cnt)]).astype(np.int32),
+        "col_idx": _pad_i32(u[order], cap),
+        "edge_dst": _pad_i32(v[order], cap),
+        "jc": _pad_i32(uu, cap_nzc, fill=n_pad),
+        "cp": cp,
+        "nnz": np.int32(nnz),
+        "nzc": np.int32(len(uu)),
+        "deg_A": cnt.astype(np.int32),
+    }
+
+
+def regen_shard_2d(spec: BuildSpec, part, i: int, j: int, *, cap: int,
+                   cap_seg: int, cap_nzc: int,
+                   cap_nzr: int) -> Dict[str, np.ndarray]:
+    """Block ``(i, j)``'s BlockedGraph arrays (shard slice, no leading
+    block dims), bit-identical to ``dist_build_2d`` phase 2."""
+    nr, nc, chunk, pc = part.nr, part.nc, part.chunk, part.pc
+    gu, gv = _shard_edges(
+        spec, lambda a, b: (a // nc == j) & (b // nr == i))
+    u = (gu - j * nc).astype(np.int32)
+    v = (gv - i * nr).astype(np.int32)
+    nnz = len(u)
+    ccnt = np.bincount(u, minlength=nc)[:nc] if nnz \
+        else np.zeros(nc, np.int64)
+    rcnt = np.bincount(v, minlength=nr)[:nr] if nnz \
+        else np.zeros(nr, np.int64)
+    uu, fiu = (np.unique(u, return_index=True) if nnz
+               else (np.zeros(0, np.int32), np.zeros(0, np.int64)))
+    cp = np.full(cap_nzc + 1, nnz, np.int32)
+    cp[: len(fiu)] = fiu.astype(np.int32)
+    order = np.lexsort((u, v))           # CSR: primary v, secondary u
+    bv = v[order]
+    vv, fiv = (np.unique(bv, return_index=True) if nnz
+               else (np.zeros(0, np.int32), np.zeros(0, np.int64)))
+    rp = np.full(cap_nzr + 1, nnz, np.int32)
+    rp[: len(fiv)] = fiv.astype(np.int32)
+    row_ptr = np.concatenate([[0], np.cumsum(rcnt)]).astype(np.int32)
+    # deg_A: whole-row strip in-degree sliced to this block's layout-A
+    # chunk — needs edges from EVERY column block of row i
+    dlo = i * nr + j * chunk
+    du, dv = _shard_edges(
+        spec, lambda a, b: (b >= dlo) & (b < dlo + chunk))
+    deg = (np.bincount((dv - dlo).astype(np.int64),
+                       minlength=chunk)[:chunk] if len(dv)
+           else np.zeros(chunk, np.int64))
+    return {
+        "col_ptr": np.concatenate(
+            [[0], np.cumsum(ccnt)]).astype(np.int32),
+        "row_idx": _pad_i32(v, cap),
+        "edge_src": _pad_i32(u, cap),
+        "row_ptr": row_ptr,
+        "col_idx": _pad_i32(u[order], cap + cap_seg),
+        "edge_dst": _pad_i32(bv, cap + cap_seg),
+        "seg_ptr": row_ptr[np.arange(pc + 1) * chunk],
+        "jc": _pad_i32(uu, cap_nzc, fill=nc),
+        "cp": cp,
+        "jr": _pad_i32(vv, cap_nzr, fill=nr),
+        "rp": rp,
+        "nnz": np.int32(nnz),
+        "nzc": np.int32(int(np.sum(ccnt > 0))),
+        "nzr": np.int32(int(np.sum(rcnt > 0))),
+        "deg_A": deg.astype(np.int32),
+    }
+
+
+def regen_shard(spec: BuildSpec, graph_kind: str, part, shard: int,
+                scalars: Dict[str, int],
+                fields: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """Regenerate one store shard from its BuildSpec + stored geometry.
+
+    ``shard`` is the flat shard index (k for strips, i*pc + j for the
+    checkerboard); ``scalars``/``fields`` are the store meta entries
+    (fields supply the capacities the scalars don't carry:
+    cap_nzc/cap_nzr from the jc/jr shapes).  Returns only the arrays
+    named in ``fields``."""
+    if graph_kind == "Blocked1DGraph":
+        arrs = regen_shard_1d(
+            spec, part, shard, cap=int(scalars["cap"]),
+            cap_nzc=int(fields["jc"][0][-1]))
+    elif graph_kind == "BlockedGraph":
+        arrs = regen_shard_2d(
+            spec, part, shard // part.pc, shard % part.pc,
+            cap=int(scalars["cap"]), cap_seg=int(scalars["cap_seg"]),
+            cap_nzc=int(fields["jc"][0][-1]),
+            cap_nzr=int(fields["jr"][0][-1]))
+    else:
+        raise ValueError(f"cannot regenerate shards of {graph_kind!r}")
+    return {k: arrs[k] for k in fields}

@@ -1,0 +1,416 @@
+"""Deterministic fault injection for the robustness layer.
+
+Every injector is keyed by an integer seed: the exact fault schedule —
+which vertex's parent gets bit-flipped, which store shard byte gets
+corrupted, how small a capacity gets squeezed — is a pure function of
+(seed, graph), so CI replays the identical faults on every run and a
+failure is reproducible from its seed alone.
+
+Four fault families, matching what the robustness stack must catch:
+
+* **parent-array corruption** (``inject_parents``): bit-flipped
+  parents, phantom (non-edge) parents, off-by-one level skews, orphaned
+  reachable vertices, dropped sub-bucket ranges.  Each injector
+  GUARANTEES the mutated array is invalid (it searches seeded candidate
+  order for a mutation the Graph500 conditions reject, consulting the
+  host oracle's edge set + true depths) — so "validator flags 100% of
+  injected corruption" is a meaningful kill matrix, not luck.
+* **store corruption** (``corrupt_shard``): flip a byte or truncate a
+  GraphStore shard file; the store's CRC check must quarantine +
+  regenerate it.
+* **undersized capacities** (``undersize_cap``): squeeze cap_x /
+  route_slack so the replan-retry escalation paths exercise.
+* the CLI (``python -m repro.runtime.faultinject``) replays the full
+  seeded matrix on forced host devices and writes a JSON report — the
+  CI ``faults`` lane artifact (mirrors analysis/lint.py's lane).
+
+Injectors never import the engine; they mutate host arrays/files only.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PARENT_FAULTS = ("flip_bit", "phantom_parent", "level_skew",
+                 "orphan_leaf", "drop_subrange")
+
+
+class InjectionError(RuntimeError):
+    """The graph admits no invalid mutation of the requested class
+    (degenerate inputs — e.g. a star graph has no same-level edges)."""
+
+
+# ---------------------------------------------------------------------------
+# parent-array injectors
+# ---------------------------------------------------------------------------
+
+
+class _Oracle:
+    """Host adjacency + true-depth context the injectors consult to
+    guarantee their mutation violates a Graph500 condition."""
+
+    def __init__(self, n: int, src, dst, root: int, parents):
+        from repro.core import ref
+        self.n = int(n)
+        self.root = int(root)
+        self.parents = np.asarray(parents).astype(np.int64)
+        self.depth = ref.bfs_depths(n, src, dst, root)
+        self.adj = set(zip(np.asarray(src).tolist(),
+                           np.asarray(dst).tolist()))
+        self.src, self.dst = np.asarray(src), np.asarray(dst)
+        self.in_tree = np.nonzero(self.parents >= 0)[0]
+
+    def is_edge(self, u: int, v: int) -> bool:
+        return (u, v) in self.adj or (v, u) in self.adj
+
+    def valid_parent(self, v: int, p: int) -> bool:
+        """Would ``parent[v] = p`` still satisfy every per-vertex
+        Graph500 condition?  (Any true-BFS parent is acceptable — the
+        spec admits every valid tree, not one canonical tree.)"""
+        if v == self.root:
+            return p == self.root
+        if p < 0 or p >= self.n:
+            return False
+        return self.is_edge(p, v) and self.depth[p] == self.depth[v] - 1
+
+
+def inject_parents(kind: str, parents, root: int, seed: int, *, n: int,
+                   src, dst, chunk: Optional[int] = None,
+                   expand_chunks: int = 1
+                   ) -> Tuple[np.ndarray, Dict]:
+    """Return (mutated_parents, info) for one seeded parent fault.
+
+    ``parents`` is a correct (n_orig,) parent array from a real run;
+    the mutation is guaranteed invalid (see module docstring).
+    ``chunk``/``expand_chunks`` parameterize ``drop_subrange`` — the
+    1ds sub-bucket geometry whose loss the fault simulates."""
+    if kind not in PARENT_FAULTS:
+        raise ValueError(f"unknown parent fault {kind!r}; "
+                         f"have {PARENT_FAULTS}")
+    rng = np.random.default_rng(seed)
+    out = np.asarray(parents).astype(np.int64).copy()
+    orc = _Oracle(n, src, dst, root, out)
+    cands = [int(v) for v in orc.in_tree if v != root]
+    if not cands:
+        raise InjectionError("tree has no non-root vertices to corrupt")
+    rng.shuffle(cands)
+
+    if kind == "flip_bit":
+        bits = list(range(33))          # value bits 0..31 + sign bit 32
+        for v in cands:
+            order = rng.permutation(bits)
+            for b in order:
+                newp = int(out[v]) ^ (1 << int(b)) if b < 32 \
+                    else -int(out[v]) - 1           # flip two's-compl sign
+                if newp != out[v] and not orc.valid_parent(v, newp):
+                    info = {"kind": kind, "vertex": v, "bit": int(b),
+                            "old": int(out[v]), "new": int(newp)}
+                    out[v] = newp
+                    return out, info
+        raise InjectionError("no invalidating bit flip found")
+
+    if kind == "phantom_parent":
+        intree = set(cands) | {root}
+        for v in cands:
+            pool = rng.permutation(list(intree - {v}))
+            for u in pool[:256]:
+                u = int(u)
+                if not orc.is_edge(u, v):
+                    info = {"kind": kind, "vertex": v,
+                            "old": int(out[v]), "new": u}
+                    out[v] = u
+                    return out, info
+        raise InjectionError("no non-adjacent in-tree pair found")
+
+    if kind == "level_skew":
+        # a REAL edge whose endpoints sit on the same level (or worse):
+        # the tree edge exists and anchors, only the level arithmetic
+        # breaks — the subtlest class, invisible to every check except
+        # the +-1 level condition
+        depth = orc.depth
+        for want_gap in (0, 1):          # same level, then child-as-parent
+            for v in cands:
+                nbrs = np.concatenate([orc.dst[orc.src == v],
+                                       orc.src[orc.dst == v]])
+                nbrs = rng.permutation(np.unique(nbrs))
+                for w in nbrs:
+                    w = int(w)
+                    if w == out[v] or w == v or out[w] < 0:
+                        continue
+                    if depth[w] == depth[v] + want_gap:
+                        info = {"kind": kind, "vertex": v,
+                                "old": int(out[v]), "new": w,
+                                "gap": int(want_gap)}
+                        out[v] = w
+                        return out, info
+        raise InjectionError("no same-level edge found")
+
+    if kind == "orphan_leaf":
+        is_parent = set(out[out >= 0].tolist())
+        for v in cands:
+            if v not in is_parent:
+                info = {"kind": kind, "vertex": v, "old": int(out[v])}
+                out[v] = -1
+                return out, info
+        raise InjectionError("tree has no leaf")
+
+    # drop_subrange: lose one 1ds sub-bucket — a contiguous [k*chunk +
+    # s*sub, +sub) slice of discovered vertices reads as never-arrived
+    if chunk is None:
+        raise ValueError("drop_subrange needs the strip chunk size")
+    sub = max(1, chunk // max(1, expand_chunks))
+    n_orig = out.shape[0]
+    starts = [s for s in range(0, n_orig, sub)]
+    rng.shuffle(starts)
+    for s in starts:
+        sel = np.zeros(n_orig, bool)
+        sel[s: s + sub] = True
+        sel &= (out >= 0) & (np.arange(n_orig) != root)
+        if sel.any():
+            info = {"kind": kind, "start": int(s), "sub": int(sub),
+                    "dropped": int(sel.sum())}
+            out[sel] = -1
+            return out, info
+    raise InjectionError("no sub-range holds in-tree vertices")
+
+
+# ---------------------------------------------------------------------------
+# store + capacity injectors
+# ---------------------------------------------------------------------------
+
+
+def corrupt_shard(store, name: str, seed: int, mode: str = "flip",
+                  shard: Optional[int] = None,
+                  step: Optional[int] = None) -> str:
+    """Corrupt one shard file of a stored graph in place (seeded shard
+    + byte choice).  ``mode``: "flip" XORs one payload byte,
+    "truncate" cuts the file to a seeded fraction.  Returns the path."""
+    from repro.ckpt import checkpoint
+    rng = np.random.default_rng(seed)
+    gdir = os.path.join(store.root, "graphs", name)
+    if step is None:
+        step = checkpoint.latest_step(gdir)
+        if step is None:
+            raise FileNotFoundError(f"no graph steps under {gdir}")
+    shards = sorted(glob.glob(os.path.join(
+        gdir, f"step_{step:010d}", "shard_*.npz")))
+    if not shards:
+        raise FileNotFoundError(f"no shard files under {gdir}")
+    path = shards[int(rng.integers(len(shards))) if shard is None
+                  else shard]
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    if mode == "flip":
+        pos = int(rng.integers(len(data) // 2, len(data)))
+        data[pos] ^= int(rng.integers(1, 256))
+        payload = bytes(data)
+    elif mode == "truncate":
+        cut = int(len(data) * float(rng.uniform(0.2, 0.7)))
+        payload = bytes(data[:cut])
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    with open(path, "wb") as f:
+        f.write(payload)
+    return path
+
+
+def undersize_cap(cap: int, seed: int, align: int = 32) -> int:
+    """A seeded, deliberately-too-small capacity: cap / 2^k (k in 2..4),
+    floored to ``align`` — small enough to overflow realistic runs,
+    aligned enough to plan."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 5))
+    return max(align, (cap >> k) // align * align)
+
+
+def undersize_route_slack(seed: int) -> float:
+    """A seeded route_slack in [0.2, 0.45) — overflows R-MAT skew at
+    small p, heals within <=3 doublings."""
+    rng = np.random.default_rng(seed)
+    return float(rng.uniform(0.2, 0.45))
+
+
+# ---------------------------------------------------------------------------
+# the seeded fault matrix (CLI + CI lane)
+# ---------------------------------------------------------------------------
+
+
+def _grid_for(devices: int) -> Tuple[int, int]:
+    grids = {1: (1, 1), 2: (1, 2), 4: (2, 2), 8: (2, 4), 16: (4, 4)}
+    if devices not in grids:
+        raise ValueError(f"fault matrix supports devices in "
+                         f"{sorted(grids)}, got {devices}")
+    return grids[devices]
+
+
+def run_fault_matrix(seed: int = 0, scale: int = 8, edge_factor: int = 8,
+                     devices: int = 1) -> Dict:
+    """Replay the whole seeded fault schedule and report per-case
+    verdicts.  Covers: clean-run validation per decomposition, the
+    parent-fault kill matrix, cap_x + route_slack healing (parents /
+    arrays bit-identical to unfaulted runs), and store shard
+    corruption -> quarantine + regeneration."""
+    import tempfile
+
+    import jax
+
+    from repro.ckpt.graph_store import GraphStore
+    from repro.configs.base import BFSConfig
+    from repro.core import validate as V
+    from repro.core.engine import plan_bfs, run_bfs_healed
+    from repro.graph.dist_build import BuildSpec, dist_build
+    from repro.graph.rmat import rmat_graph
+    from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+
+    if len(jax.devices()) < devices:
+        raise RuntimeError(f"need {devices} devices, have "
+                           f"{len(jax.devices())}")
+    pr, pc = _grid_for(devices)
+    spec = BuildSpec(scale=scale, edge_factor=edge_factor, seed=3)
+    edges = rmat_graph(scale, edge_factor, seed=3, generator="counter")
+    mesh1 = make_local_mesh_1d(devices)
+    mesh2 = make_local_mesh(pr, pc)
+    root = 5
+    cases: List[Dict] = []
+
+    def case(name: str, fn):
+        try:
+            detail = fn() or {}
+            cases.append({"name": name, "ok": True, "detail": detail})
+        except Exception as e:                # noqa: BLE001 — report it
+            cases.append({"name": name, "ok": False,
+                          "detail": {"error": f"{type(e).__name__}: {e}"}})
+
+    engines = {}
+    results = {}
+    for decomp in ("1d", "1ds", "2d"):
+        mesh = mesh2 if decomp == "2d" else mesh1
+        grid = (pr, pc) if decomp == "2d" else devices
+        graph, _ = dist_build(spec, decomp, mesh, grid, align=32,
+                              cap_pad=32)
+        cfg = BFSConfig(decomposition=decomp, instrument=False)
+        eng = plan_bfs(graph, cfg, mesh).compile()
+        engines[decomp] = eng
+
+        def clean(eng=eng):
+            res = eng.run(root, validate=True)
+            results[eng.plan.cfg.decomposition] = res
+            return res.validation.to_json()
+        case(f"clean/{decomp}", clean)
+
+        for kind in PARENT_FAULTS:
+            def kill(eng=eng, kind=kind, decomp=decomp):
+                res = results[decomp]
+                bad, info = inject_parents(
+                    kind, res.parents, root, seed, n=edges.n,
+                    src=edges.src, dst=edges.dst,
+                    chunk=eng.plan.part.chunk)
+                rep = V.validate_parents(eng, root, bad)
+                if rep.ok:
+                    raise AssertionError(
+                        f"validator MISSED injected {kind}: {info}")
+                return {"fault": info,
+                        "violations": rep.violations}
+            case(f"kill/{decomp}/{kind}", kill)
+
+    def heal_cap_x():
+        cfg = BFSConfig(decomposition="1ds", instrument=True,
+                        direction_optimizing=False)
+        base = engines["1ds"].plan
+        good = plan_bfs(base.graph, cfg, mesh1).compile().run(root)
+        squeezed = undersize_cap(base.part.chunk, seed)
+        h = run_bfs_healed(base.graph, cfg, mesh1, root,
+                           cap_x=squeezed, validate=True)
+        if not np.array_equal(h.result.parents, good.parents):
+            raise AssertionError("healed parents differ from unfaulted")
+        return {"cap_x0": squeezed, "retry_log": h.retry_log}
+    case("heal/cap_x", heal_cap_x)
+
+    def heal_route():
+        slack = undersize_route_slack(seed)
+        g, info = dist_build(spec, "1ds", mesh1, devices, align=32,
+                             cap_pad=32, route_slack=slack)
+        ref_arrays = engines["1ds"].plan.graph.device_arrays()
+        for k, v in g.device_arrays().items():
+            if not np.array_equal(np.asarray(v),
+                                  np.asarray(ref_arrays[k])):
+                raise AssertionError(f"healed build differs at {k}")
+        return {"route_slack0": slack, "retry_log": info["retry_log"]}
+    case("heal/route_slack", heal_route)
+
+    tmp = tempfile.mkdtemp(prefix="faultstore_")
+    store = GraphStore(tmp)
+    for decomp, mode in (("1ds", "flip"), ("2d", "truncate")):
+        def repair(decomp=decomp, mode=mode):
+            g = engines[decomp].plan.graph
+            name = f"g_{decomp}"
+            store.save_graph(name, g, spec=spec)
+            path = corrupt_shard(store, name, seed, mode=mode)
+            loaded = store.load_graph(name, expect_spec=spec)
+            rep = store.last_load_report
+            if not rep["repaired"]:
+                raise AssertionError(f"corruption of {path} undetected")
+            for k, v in g.device_arrays().items():
+                if not np.array_equal(np.asarray(v),
+                                      np.asarray(loaded.device_arrays()[k])):
+                    raise AssertionError(f"regen differs at {k}")
+            return {"corrupted": os.path.basename(path), "mode": mode,
+                    "repaired": rep["repaired"]}
+        case(f"store/{decomp}/{mode}", repair)
+
+    return {"seed": seed, "scale": scale, "edge_factor": edge_factor,
+            "devices": devices, "cases": cases,
+            "ok": all(c["ok"] for c in cases)}
+
+
+# ---------------------------------------------------------------------------
+# CLI (the CI `faults` lane)
+# ---------------------------------------------------------------------------
+
+
+def _force_devices(n: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = \
+        f"{flags} --xla_force_host_platform_device_count={n}"
+
+
+def main(argv=None) -> int:
+    import argparse
+    parser = argparse.ArgumentParser(
+        description="Replay the seeded fault-injection matrix "
+                    "(validator kill matrix, capacity healing, store "
+                    "shard regeneration) and report JSON verdicts.")
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument("--scale", type=int, default=8)
+    parser.add_argument("--edge-factor", type=int, default=8)
+    parser.add_argument("--devices", type=int, default=16,
+                        help="forced host device count (set before jax "
+                             "import)")
+    parser.add_argument("--json", type=str, default=None,
+                        help="write the report to this path")
+    args = parser.parse_args(argv)
+
+    _force_devices(args.devices)
+    report = run_fault_matrix(seed=args.seed, scale=args.scale,
+                              edge_factor=args.edge_factor,
+                              devices=args.devices)
+    for c in report["cases"]:
+        status = "ok  " if c["ok"] else "FAIL"
+        print(f"  [{status}] {c['name']}")
+        if not c["ok"]:
+            print(f"         {c['detail']}")
+    print(f"fault matrix: {sum(c['ok'] for c in report['cases'])}/"
+          f"{len(report['cases'])} cases ok (seed={report['seed']})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"report -> {args.json}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

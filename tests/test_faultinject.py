@@ -1,0 +1,313 @@
+"""Self-healing under injected faults: GraphStore shard corruption ->
+quarantine + bit-identical regeneration, orphaned tmp-dir sweeps, the
+bounded replan-retry drivers (route_slack in dist_build, cap_x in
+run_bfs_healed), BuildSpec-driven elastic repartitioning, straggler
+wiring, and (slow) the full seeded fault-matrix CLI on forced host
+devices."""
+import glob
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.ckpt.elastic import repartition_graph
+from repro.ckpt.graph_store import GraphStore, shard_crc32
+from repro.configs.base import BFSConfig
+from repro.core.engine import plan_bfs, run_bfs_healed
+from repro.graph.dist_build import (BuildSpec, dist_build, dist_build_1d,
+                                    regen_shard)
+from repro.graph.formats import build_blocked, build_blocked_1d
+from repro.graph.rmat import rmat_graph
+from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+from repro.runtime.faultinject import (corrupt_shard, undersize_cap,
+                                       undersize_route_slack)
+from repro.runtime.retry import CapacityOverflow, RetryAttempt, escalate
+from repro.runtime.straggler import StragglerMonitor
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SPEC = BuildSpec(scale=8, edge_factor=8, seed=3)
+
+
+def _build(decomp="1ds"):
+    mesh = make_local_mesh(1, 1) if decomp == "2d" \
+        else make_local_mesh_1d(1)
+    grid = (1, 1)
+    g, info = dist_build(SPEC, decomp, mesh, grid, align=32, cap_pad=32)
+    return g, info, mesh
+
+
+def _arrays(g):
+    return {k: np.asarray(v) for k, v in g.device_arrays().items()}
+
+
+# ---------------------------------------------------------------------------
+# retry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_escalate_doubles_and_clamps():
+    assert escalate(32) == 64
+    assert escalate(32, factor=4) == 128
+    assert escalate(96, ceiling=128) == 128
+    assert escalate(128, ceiling=128) == 128
+
+
+def test_capacity_overflow_carries_history():
+    hist = [RetryAttempt(1, "cap_x", 32, "overflow", {"levels": [2]}),
+            RetryAttempt(2, "cap_x", 64, "ok", {})]
+    e = CapacityOverflow("bucket overflow", cap_name="cap_x",
+                         cap_value=64, history=hist)
+    assert "escalation history" in str(e)
+    assert "attempt 1: cap_x=32 -> overflow" in str(e)
+    assert e.history == tuple(hist)
+    assert e.history_json()[0]["outcome"] == "overflow"
+    plain = CapacityOverflow("no history")
+    assert "escalation" not in str(plain)
+
+
+# ---------------------------------------------------------------------------
+# store corruption -> quarantine + regeneration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("decomp,mode", [("1ds", "flip"),
+                                         ("1d", "truncate"),
+                                         ("2d", "flip"),
+                                         ("2d", "truncate")])
+def test_corrupted_shard_quarantined_and_regenerated(tmp_path, decomp,
+                                                     mode):
+    g, _, _ = _build(decomp)
+    store = GraphStore(str(tmp_path))
+    store.save_graph("g", g, spec=SPEC)
+    path = corrupt_shard(store, "g", seed=2, mode=mode)
+    loaded = store.load_graph("g", expect_spec=SPEC)
+    rep = store.last_load_report
+    assert [r["shard"] for r in rep["repaired"]] == [0]
+    assert os.path.exists(path + ".quarantined")
+    want = _arrays(g)
+    got = _arrays(loaded)
+    assert set(got) == set(want)
+    for k in want:
+        assert np.array_equal(want[k], got[k]), (decomp, mode, k)
+    # the repaired file is clean: a second load repairs nothing
+    store.load_graph("g", expect_spec=SPEC)
+    assert store.last_load_report["repaired"] == []
+
+
+def test_repair_disabled_raises(tmp_path):
+    g, _, _ = _build("1ds")
+    store = GraphStore(str(tmp_path))
+    store.save_graph("g", g, spec=SPEC)
+    corrupt_shard(store, "g", seed=2, mode="flip")
+    with pytest.raises(RuntimeError, match="repair disabled"):
+        store.load_graph("g", expect_spec=SPEC, repair=False)
+
+
+def test_repair_without_spec_raises(tmp_path):
+    g, _, _ = _build("1ds")
+    store = GraphStore(str(tmp_path))
+    store.save_graph("g", g)                  # no BuildSpec in the meta
+    corrupt_shard(store, "g", seed=2, mode="flip")
+    with pytest.raises(RuntimeError, match="spec"):
+        store.load_graph("g")
+
+
+def test_regen_shard_matches_saved_crc(tmp_path):
+    """regen_shard reproduces the device-built shard bit-for-bit — the
+    CRC equality the repair path refuses to publish without."""
+    for decomp in ("1ds", "2d"):
+        g, _, _ = _build(decomp)
+        store = GraphStore(str(tmp_path))
+        store.save_graph(f"g-{decomp}", g, spec=SPEC)
+        gdir = os.path.join(str(tmp_path), "graphs", f"g-{decomp}")
+        sdir = sorted(glob.glob(os.path.join(gdir, "step_*")))[-1]
+        with open(os.path.join(sdir, "meta.json")) as f:
+            meta = json.load(f)
+        arrs = regen_shard(SPEC, meta["graph_kind"], g.part, 0,
+                           json.loads(meta["scalars"]),
+                           json.loads(meta["fields"]))
+        assert shard_crc32(arrs) == meta["shard_crc32"][0]
+
+
+def test_tmp_dirs_swept_on_open(tmp_path):
+    g, _, _ = _build("1ds")
+    store = GraphStore(str(tmp_path))
+    store.save_graph("g", g, spec=SPEC)
+    orphan = os.path.join(str(tmp_path), "graphs", "g",
+                          ".tmp_interrupted")
+    os.makedirs(orphan)
+    with open(os.path.join(orphan, "shard_00000.npz"), "wb") as f:
+        f.write(b"partial")
+    store2 = GraphStore(str(tmp_path))
+    assert not os.path.exists(orphan)
+    assert store2.swept == [orphan]
+    store2.load_graph("g", expect_spec=SPEC)   # untouched by the sweep
+
+
+# ---------------------------------------------------------------------------
+# bounded replan-retry: route_slack (build) and cap_x (traversal)
+# ---------------------------------------------------------------------------
+
+
+def test_dist_build_heals_route_overflow():
+    mesh = make_local_mesh_1d(1)
+    with pytest.raises(CapacityOverflow, match="route_slack"):
+        dist_build_1d(SPEC, 1, mesh, route_slack=0.3)
+    g, info = dist_build(SPEC, "1d", mesh, 1, route_slack=0.3)
+    log = info["retry_log"]
+    assert [e["outcome"] for e in log] == ["overflow", "overflow", "ok"]
+    assert [e["cap_value"] for e in log] == [0.3, 0.6, 1.2]
+    ref, _ = dist_build_1d(SPEC, 1, mesh, route_slack=1.2)
+    want, got = _arrays(ref), _arrays(g)
+    for k in want:
+        assert np.array_equal(want[k], got[k]), k
+
+
+def test_dist_build_clean_first_attempt_logs_nothing():
+    g, info, _ = _build("1ds")
+    assert info["retry_log"] == []
+
+
+def test_dist_build_exhaustion_reraises_with_history():
+    mesh = make_local_mesh_1d(1)
+    with pytest.raises(CapacityOverflow, match="escalation history") as ei:
+        dist_build(SPEC, "1d", mesh, 1, route_slack=0.001,
+                   max_attempts=2)
+    assert len(ei.value.history) == 2
+    assert "route_slack" in str(ei.value)
+
+
+def test_run_bfs_healed_clean_plan_empty_log():
+    g, _, mesh = _build("1ds")
+    cfg = BFSConfig(decomposition="1ds", instrument=False,
+                    direction_optimizing=False)
+    h = run_bfs_healed(g, cfg, mesh, 5)
+    assert h.retry_log == []
+    assert not h.plan.cfg.instrument          # fast program, not probe
+    base = plan_bfs(g, cfg, mesh).compile().run(5)
+    assert np.array_equal(h.result.parents, base.parents)
+
+
+def test_run_bfs_healed_non_1ds_single_attempt():
+    g, _, mesh = _build("2d")
+    cfg = BFSConfig(decomposition="2d", instrument=False)
+    h = run_bfs_healed(g, cfg, mesh, 5, validate=True)
+    assert h.retry_log == []
+    assert h.result.validation.ok
+
+
+def test_undersize_helpers_seeded():
+    assert undersize_cap(512, 3) == undersize_cap(512, 3)
+    assert 32 <= undersize_cap(512, 3) < 512
+    assert undersize_cap(512, 3) % 32 == 0
+    s = undersize_route_slack(3)
+    assert s == undersize_route_slack(3) and 0.2 <= s < 0.45
+
+
+# ---------------------------------------------------------------------------
+# elastic repartitioning from a BuildSpec
+# ---------------------------------------------------------------------------
+
+
+def test_repartition_from_spec_matches_host_reblock():
+    """BuildSpec-driven repartitioning lands the same blocked graph a
+    host re-block of the same edge stream produces (p=1 parity, both
+    strip and checkerboard targets)."""
+    edges = rmat_graph(SPEC.scale, SPEC.edge_factor, seed=SPEC.seed,
+                       generator="counter")
+    g1 = repartition_graph(spec=SPEC, mesh=make_local_mesh_1d(1),
+                           pr=1, pc=1, decomposition="1ds",
+                           align=32, cap_pad=32)
+    h1 = build_blocked_1d(edges, 1, align=32, cap_pad=32)
+    g2 = repartition_graph(spec=SPEC, mesh=make_local_mesh(1, 1),
+                           pr=1, pc=1, decomposition="2d",
+                           align=32, cap_pad=32)
+    h2 = build_blocked(edges, 1, 1, align=32, cap_pad=32)
+    for dev, host in ((g1, h1), (g2, h2)):
+        want, got = _arrays(host), _arrays(dev)
+        for k in got:
+            if k in want:
+                assert np.array_equal(want[k], got[k]), k
+
+
+def test_repartition_argument_errors():
+    with pytest.raises(ValueError, match="mesh"):
+        repartition_graph(spec=SPEC)
+    with pytest.raises(ValueError, match="EdgeList or a"):
+        repartition_graph()
+
+
+# ---------------------------------------------------------------------------
+# straggler wiring
+# ---------------------------------------------------------------------------
+
+
+def test_run_many_feeds_straggler_monitor():
+    g, _, mesh = _build("1ds")
+    eng = plan_bfs(g, BFSConfig(decomposition="1ds",
+                                instrument=False), mesh).compile()
+    mon = StragglerMonitor(min_samples=2, factor=1e-9)
+    res = eng.run_many([5, 6, 7, 8], monitor=mon)
+    assert len(res) == 4
+    # with a zero deadline every post-warmup root is an "event"
+    assert len(mon.events) == 2
+    assert [e[0] for e in mon.events] == [2, 3]
+
+
+def test_worker_monitor_plumbing():
+    spec = importlib.util.spec_from_file_location(
+        "bench_worker", os.path.join(_ROOT, "benchmarks", "worker.py"))
+    worker = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(worker)
+    assert worker._monitor_from({}) is None
+    mon = worker._monitor_from({"straggler": {"min_samples": 1,
+                                              "factor": 2.0}})
+    assert mon.min_samples == 1 and mon.factor == 2.0
+    mon.observe(0, 0.01)
+    mon.observe(1, 10.0)
+    blk = worker._monitor_block(mon)
+    assert blk["straggler_events"][0]["step"] == 1
+    assert blk["straggler_deadline_s"] == pytest.approx(mon.deadline)
+    assert worker._monitor_block(None) == {}
+
+
+# ---------------------------------------------------------------------------
+# the full seeded matrix, multi-device (slow subprocess lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fault_matrix_cli_multidevice(tmp_path):
+    """The CI faults lane end-to-end on 4 forced host devices: 100%
+    kill rate on every injected corruption class, cap_x and route_slack
+    escalations actually escalate, store shards regenerate."""
+    out = str(tmp_path / "faults.json")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.faultinject",
+         "--devices", "4", "--scale", "9", "--seed", "0",
+         "--json", out],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rep = json.load(open(out))
+    assert rep["ok"] and len(rep["cases"]) == 22
+    names = {c["name"] for c in rep["cases"]}
+    for d in ("1d", "1ds", "2d"):
+        assert f"clean/{d}" in names
+        for kind in ("flip_bit", "phantom_parent", "level_skew",
+                     "orphan_leaf", "drop_subrange"):
+            assert f"kill/{d}/{kind}" in names
+    by = {c["name"]: c for c in rep["cases"]}
+    # escalations really escalated (scale 9 / 4 strips overflows both)
+    assert by["heal/cap_x"]["detail"]["retry_log"][-1]["outcome"] == "ok"
+    assert len(by["heal/cap_x"]["detail"]["retry_log"]) >= 2
+    assert by["heal/route_slack"]["detail"]["retry_log"][-1]["outcome"] \
+        == "ok"
+    assert by["store/1ds/flip"]["detail"]["repaired"]
+    assert by["store/2d/truncate"]["detail"]["repaired"]

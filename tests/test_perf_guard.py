@@ -65,7 +65,7 @@ def test_enumeration_covers_every_registered_case(counts):
     """The subprocess lowered exactly the registry enumeration — a new
     entry or schedule dim shows up here without touching this file."""
     expected = {c.name for c in budget_cases()}
-    got = set(counts) - {"pc", "p"}
+    got = set(counts) - {"pc", "p", "validators"}
     assert got == expected, (sorted(got ^ expected))
     assert len(expected) >= 18
 
@@ -126,6 +126,27 @@ def test_instrumented_keeps_counter_reductions(counts):
         fast = counts[name]["fast"]["td"]
         assert inst.get("all-reduce", 0) >= 3, (name, inst)
         assert inst["total"] > fast["total"], (name, inst, fast)
+
+
+def test_validator_collective_budget(counts):
+    """The Graph500 parent-tree validator stays within its published
+    collective budget for every registered decomposition: gathers to
+    replicate the candidate parents (1 for strips, 2 for the 2D grid)
+    plus 2 all-reduces (tree-edge-existence OR + the fused verdict
+    psum).  A validator that starts shipping edges or depths would blow
+    this immediately."""
+    from repro.core.comm_model import validate_collective_budget
+
+    vals = counts["validators"]
+    assert set(vals) == {c.decomposition for c in budget_cases()}
+    for name, got in vals.items():
+        budget = validate_collective_budget(name)
+        assert got.get("all-gather", 0) <= budget["all-gather"], (name, got)
+        assert got.get("all-reduce", 0) <= budget["all-reduce"], (name, got)
+        assert got["total"] <= budget["total"], (name, got, budget)
+        # and it must actually DO the replication + verdict reduction
+        assert got.get("all-gather", 0) >= 1, (name, got)
+        assert got.get("all-reduce", 0) >= 1, (name, got)
 
 
 def test_packed_codec_same_schedule(counts):

@@ -1,0 +1,195 @@
+"""Sharded Graph500 parent-tree validation (repro.core.validate).
+
+Two halves:
+
+* **clean matrix** — every registered decomposition x storage x
+  instrument combo produces a parent array the device validator accepts,
+  and the verdict agrees with the host oracle (``core.ref``) on roots
+  both reachable-rich and nearly isolated.
+* **mutation kill matrix** — every seeded fault class from
+  ``runtime.faultinject`` (bit-flipped parent, phantom parent, level
+  skew, orphaned reachable vertex, dropped sub-bucket) is flagged, in
+  every decomposition, with the violation landing on the right check.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import BFSConfig
+from repro.core import decomp
+from repro.core import ref
+from repro.core import validate as V
+from repro.core.engine import plan_bfs
+from repro.core.validate import (CHECKS, ValidationError, ValidationReport,
+                                 report_from_counts)
+from repro.graph.formats import build_blocked, build_blocked_1d
+from repro.graph.rmat import rmat_graph
+from repro.launch.mesh import make_local_mesh, make_local_mesh_1d
+from repro.runtime.faultinject import (PARENT_FAULTS, InjectionError,
+                                       inject_parents)
+
+ROOT = 5
+
+
+@pytest.fixture(scope="module")
+def fixed_graph():
+    e = rmat_graph(8, edge_factor=8, seed=4)
+    return (e, build_blocked_1d(e, 1, align=32, cap_pad=32,
+                                with_col_ptr=True),
+            build_blocked(e, 1, 1, align=32, cap_pad=32))
+
+
+def _mesh_for(d):
+    return make_local_mesh(1, 1) if d == "2d" else make_local_mesh_1d(1)
+
+
+def _graph_for(d, g1, g2):
+    return g2 if d == "2d" else g1
+
+
+@pytest.fixture(scope="module")
+def engines(fixed_graph):
+    e, g1, g2 = fixed_graph
+    out = {}
+    for d in decomp.registered_decompositions():
+        cfg = BFSConfig(decomposition=d, instrument=False)
+        out[d] = plan_bfs(_graph_for(d, g1, g2), cfg,
+                          _mesh_for(d)).compile()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# clean matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", decomp.registered_decompositions())
+@pytest.mark.parametrize("storage", ["csr", "dcsc"])
+@pytest.mark.parametrize("instrument", [False, True])
+def test_clean_run_validates(fixed_graph, d, storage, instrument):
+    e, g1, g2 = fixed_graph
+    cfg = BFSConfig(decomposition=d, storage=storage,
+                    instrument=instrument)
+    eng = plan_bfs(_graph_for(d, g1, g2), cfg, _mesh_for(d)).compile()
+    res = eng.run(ROOT, validate=True)
+    rep = res.validation
+    assert rep.ok and rep.root == ROOT
+    assert not any(rep.violations.values())
+    # device verdict agrees with the host oracle
+    ok, msg = ref.validate_parents(e.n, e.src, e.dst, ROOT, res.parents)
+    assert ok, msg
+    assert rep.n_tree == int(np.sum(res.parents >= 0))
+
+
+def test_posthoc_host_array_validates(fixed_graph, engines):
+    e, g1, g2 = fixed_graph
+    for d, eng in engines.items():
+        parents = eng.run(ROOT).parents
+        rep = V.validate_parents(eng, ROOT, parents)
+        assert rep.ok, (d, rep.summary())
+        # padded (n,) layout accepted too
+        full = np.full(eng.plan.part.n, -1, np.int64)
+        full[: e.n] = parents
+        assert V.validate_parents(eng, ROOT, full).ok
+
+
+def test_isolated_root_validates(fixed_graph, engines):
+    """A root with no edges yields a single-vertex tree — still valid."""
+    e, g1, g2 = fixed_graph
+    deg = np.zeros(e.n, np.int64)
+    np.add.at(deg, e.src, 1)
+    lonely = int(np.argmin(deg))
+    if deg[lonely] > 0:
+        pytest.skip("seed graph has no isolated vertex")
+    for d, eng in engines.items():
+        res = eng.run(lonely, validate=True)
+        assert res.validation.n_tree == 1, d
+
+
+def test_run_validate_raises_on_bad_tree(fixed_graph, engines):
+    eng = engines["2d"]
+    good = eng.run(ROOT).parents
+    bad, _ = inject_parents("phantom_parent", good, ROOT, seed=1,
+                            n=fixed_graph[0].n, src=fixed_graph[0].src,
+                            dst=fixed_graph[0].dst)
+    with pytest.raises(ValidationError, match="INVALID parent tree"):
+        rep = V.validate_parents(eng, ROOT, bad)
+        if not rep.ok:
+            raise ValidationError(rep)
+
+
+def test_validate_rejects_wrong_length(engines):
+    eng = engines["1d"]
+    with pytest.raises(ValueError, match="entries"):
+        V.validate_parents(eng, ROOT, np.zeros(7, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# mutation kill matrix
+# ---------------------------------------------------------------------------
+
+# every fault class must trip AT LEAST these checks (faults can cascade
+# into extra violations — e.g. a phantom parent also skews levels)
+_EXPECT = {
+    "flip_bit": {"tree_edge_missing", "parent_chain_broken",
+                 "reach_mismatch", "level_span", "root_self_parent"},
+    "phantom_parent": {"tree_edge_missing"},
+    "level_skew": {"level_span", "parent_chain_broken"},
+    "orphan_leaf": {"reach_mismatch"},
+    "drop_subrange": {"reach_mismatch", "parent_chain_broken"},
+}
+
+
+@pytest.mark.parametrize("d", decomp.registered_decompositions())
+@pytest.mark.parametrize("kind", PARENT_FAULTS)
+def test_injected_fault_is_flagged(fixed_graph, engines, d, kind):
+    e, _, _ = fixed_graph
+    eng = engines[d]
+    good = eng.run(ROOT).parents
+    for seed in range(3):                # three independent schedules
+        bad, info = inject_parents(kind, good, ROOT, seed, n=e.n,
+                                   src=e.src, dst=e.dst,
+                                   chunk=eng.plan.part.chunk)
+        assert not np.array_equal(bad, good)
+        rep = V.validate_parents(eng, ROOT, bad)
+        assert not rep.ok, (d, kind, seed, info)
+        hit = {k for k, v in rep.violations.items() if v}
+        assert hit & _EXPECT[kind], (d, kind, seed, info, rep.violations)
+        # the host oracle agrees the mutation is invalid
+        ok, _ = ref.validate_parents(e.n, e.src, e.dst, ROOT,
+                                     bad[: e.n])
+        assert not ok, (d, kind, seed, info)
+
+
+def test_injection_is_deterministic(fixed_graph, engines):
+    e, _, _ = fixed_graph
+    good = engines["1ds"].run(ROOT).parents
+    for kind in PARENT_FAULTS:
+        a, ia = inject_parents(kind, good, ROOT, 7, n=e.n, src=e.src,
+                               dst=e.dst, chunk=64)
+        b, ib = inject_parents(kind, good, ROOT, 7, n=e.n, src=e.src,
+                               dst=e.dst, chunk=64)
+        assert ia == ib and np.array_equal(a, b), kind
+
+
+def test_injector_refuses_degenerate_tree():
+    src = np.array([0, 1], np.int64)
+    dst = np.array([1, 0], np.int64)
+    parents = np.array([0, 0, -1, -1], np.int64)
+    with pytest.raises(InjectionError):
+        # a 2-vertex path has no same-level edge to skew
+        inject_parents("level_skew", parents, 0, 0, n=4, src=src, dst=dst)
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_report_from_counts_roundtrip():
+    rep = report_from_counts(3, np.array([0, 0, 0, 0, 0, 17]))
+    assert rep == ValidationReport(3, True, dict.fromkeys(CHECKS, 0), 17)
+    assert "valid parent tree" in rep.summary()
+    bad = report_from_counts(3, np.array([1, 0, 2, 0, 0, 17]))
+    assert not bad.ok
+    assert "root_self_parent=1" in bad.summary()
+    assert bad.to_json()["violations"]["parent_chain_broken"] == 2
